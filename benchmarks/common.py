@@ -1,0 +1,80 @@
+"""Shared benchmark machinery: one trained small LM, cached on disk.
+
+The paper evaluates pruning on pretrained LLaMA/Mistral checkpoints (not
+available offline), so every table is reproduced as orderings/deltas on a
+small llama-family model trained in-repo on the structured synthetic corpus
+(two seeds play the roles of the paper's WikiText-2 / C4 calibration sets).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import SyntheticLM
+from repro.eval.harness import (collect_activation_stats, eval_ppl,
+                                sparsify_model, train_small_lm)
+
+CACHE = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench_model"
+
+BENCH_CFG = dataclasses.replace(
+    configs.get_smoke("llama-paper"),
+    name="bench-llama", n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    head_dim=64, d_ff=512, vocab=512, remat=False)
+
+# two calibration corpora of the SAME language (paper: WikiText-2 vs C4):
+# identical bigram structure (seed), disjoint sampling streams.
+DATA_WIKI = SyntheticLM(vocab=BENCH_CFG.vocab, seq_len=128, batch=16, seed=0,
+                        branching=24, stream_seed=0)
+DATA_C4 = SyntheticLM(vocab=BENCH_CFG.vocab, seq_len=128, batch=16, seed=0,
+                      branching=24, stream_seed=7)
+
+
+def _leaf_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in flat]
+
+
+def get_trained(steps: int = 400):
+    """Train (or load cached) benchmark model. Returns (cfg, params)."""
+    from repro.models import get_model
+    zoo = get_model(BENCH_CFG)
+    fn = CACHE.with_suffix(".npz")
+    template = zoo.init(jax.random.PRNGKey(0))
+    if fn.exists():
+        flat, tdef = jax.tree_util.tree_flatten(template)
+        names = _leaf_names(template)
+        with np.load(fn) as z:
+            if set(names) <= set(z.files):
+                # npz holds f32; cast back to each leaf's true dtype
+                leaves = [jnp.asarray(z[n]).astype(t.dtype)
+                          for n, t in zip(names, flat)]
+                return BENCH_CFG, jax.tree_util.tree_unflatten(tdef, leaves)
+    t0 = time.time()
+    params, losses = train_small_lm(BENCH_CFG, DATA_WIKI, steps=steps, lr=3e-3)
+    print(f"# trained bench model: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"in {time.time()-t0:.0f}s")
+    fn.parent.mkdir(parents=True, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten(params)
+    np.savez(fn, **{n: np.asarray(l, np.float32)
+                    for n, l in zip(_leaf_names(params), flat)})
+    return BENCH_CFG, params
+
+
+def stats_for(cfg, params, data, n_batches: int = 4):
+    return collect_activation_stats(cfg, params, data.calibration(n_batches))
+
+
+def ppl(cfg, params, data=DATA_WIKI, n_batches: int = 4):
+    return eval_ppl(cfg, params, data, n_batches=n_batches)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The benchmark output contract: name,us_per_call,derived CSV."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,66 @@
+"""EBFT benchmark helper: blockwise fine-tune a sparsified bench model."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EBFTConfig, SparsifyConfig, ebft_block, sparsify_tree)
+from repro.core.ebft import make_block_masks
+from repro.eval.harness import collect_activation_stats, eval_ppl
+from repro.models import transformer as tfm
+from repro.models.layers import rms_norm
+
+
+def _block_fn(cfg):
+    def fn(lp, x):
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+        y, _ = tfm.block_forward(lp, x, pos, cfg)
+        return y
+    return fn
+
+
+def run_ebft_row(cfg, params, data, weight_pattern="2:4", outlier_pattern=None,
+                 steps: int = 40, **scfg_kw):
+    """Sparsify then EBFT every block against its dense teacher.
+
+    Returns (ppl_after, wall_us)."""
+    t0 = time.time()
+    stats = collect_activation_stats(cfg, params, data.calibration(2))
+    scfg = SparsifyConfig(weight_pattern=weight_pattern,
+                          outlier_pattern=outlier_pattern, **scfg_kw)
+    sparse_params, records = sparsify_tree(params, stats, scfg)
+
+    # calibration block inputs: embeddings of a calibration batch
+    calib = data.calibration(1)[0]
+    toks = jnp.asarray(calib["tokens"][:8])
+    x_dense = jnp.take(params["embed"], toks, axis=0)
+    x_sparse = jnp.take(sparse_params["embed"], toks, axis=0)
+
+    block_fn = _block_fn(cfg)
+    ecfg = EBFTConfig(steps=steps, lr=2e-4, batch_size=4)
+    new_layers = {k: list() for k in sparse_params["layers"]}
+    for i in range(cfg.n_layers):
+        lp_dense = jax.tree.map(lambda p: p[i], params["layers"])
+        lp_sparse = jax.tree.map(lambda p: p[i], sparse_params["layers"])
+        mask_by_path = {}
+        for name, sl in records.items():
+            leaf = name.split("/")[-1]
+            if leaf in lp_sparse:
+                mask_by_path[leaf] = jax.tree.map(lambda m: m[i],
+                                                  sl.nonsalient_kept_mask)
+        masks = make_block_masks(lp_sparse, mask_by_path)
+        tuned, _losses = ebft_block(block_fn, lp_sparse, lp_dense, masks,
+                                    x_sparse, ecfg)
+        for k in new_layers:
+            new_layers[k].append(tuned[k])
+        # propagate calibration activations through the DENSE block (EBFT
+        # uses the dense model's intermediate inputs as teacher inputs)
+        x_dense = block_fn(lp_dense, x_dense)
+        x_sparse = block_fn(tuned, x_sparse)
+
+    tuned_params = dict(sparse_params)
+    tuned_params["layers"] = {k: jnp.stack(v) for k, v in new_layers.items()}
+    p = eval_ppl(cfg, tuned_params, data, n_batches=4)
+    return p, (time.time() - t0) * 1e6

@@ -1,0 +1,149 @@
+"""Paper-table reproductions (Tables 1, 4, 5, 6/2/3/8, 7) on the bench LM.
+
+Every function prints `name,us_per_call,derived` rows (us_per_call = wall
+time of the sparsify+eval for that row) and returns a dict for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import Pattern, SparsifyConfig
+from repro.eval.harness import sparsify_model, eval_ppl
+from .common import (BENCH_CFG, DATA_C4, DATA_WIKI, emit, get_trained, ppl,
+                     stats_for)
+
+
+def _run(cfg, params, stats, data, **kw):
+    t0 = time.time()
+    sp = sparsify_model(cfg, params, stats, SparsifyConfig(**kw))
+    p = eval_ppl(cfg, sp, data, n_batches=4)
+    return p, (time.time() - t0) * 1e6
+
+
+def table1_patterns():
+    """Pattern flexibility: configurations/bits (exact) + PPL RIA / RIA+VC."""
+    cfg, params = get_trained()
+    stats = stats_for(cfg, params, DATA_WIKI)
+    dense = ppl(cfg, params)
+    out = {"dense_ppl": dense}
+    for pat in ("2:4", "4:8", "8:16", "16:32"):
+        p = Pattern(*[int(v) for v in pat.split(":")])
+        ppl_ria, us1 = _run(cfg, params, stats, DATA_WIKI, weight_pattern=pat,
+                            outlier_pattern=None, scorer="ria",
+                            use_variance_correction=False)
+        ppl_vc, us2 = _run(cfg, params, stats, DATA_WIKI, weight_pattern=pat,
+                           outlier_pattern=None, scorer="ria",
+                           use_variance_correction=True)
+        out[pat] = dict(configurations=p.configurations,
+                        bits=p.paper_bits_per_element(),
+                        ppl_ria=ppl_ria, ppl_ria_vc=ppl_vc)
+        emit(f"table1/{pat}", us1,
+             f"cfgs={p.configurations};bits={p.paper_bits_per_element():.4f};"
+             f"ppl_ria={ppl_ria:.3f};ppl_ria_vc={ppl_vc:.3f}")
+    return out
+
+
+def table4_ablation():
+    """RIA / +VC / +SQ / +EBFT ablation at 2:4 on both calibration sets."""
+    cfg, params = get_trained()
+    rows = {}
+    for dname, data in (("wikitext2", DATA_WIKI), ("c4", DATA_C4)):
+        stats = stats_for(cfg, params, data)
+        grid = {
+            "dense": None,
+            "magnitude": dict(scorer="magnitude", use_smoothquant=False,
+                              use_variance_correction=False),
+            "ria": dict(scorer="ria", use_smoothquant=False,
+                        use_variance_correction=False),
+            "ria_vc": dict(scorer="ria", use_smoothquant=False,
+                           use_variance_correction=True),
+            "ria_sq": dict(scorer="ria", use_smoothquant=True,
+                           use_variance_correction=False),
+            "ria_sq_vc": dict(scorer="ria", use_smoothquant=True,
+                              use_variance_correction=True),
+        }
+        for mname, kw in grid.items():
+            if kw is None:
+                p, us = eval_ppl(cfg, params, data, n_batches=4), 0.0
+            else:
+                p, us = _run(cfg, params, stats, data, weight_pattern="2:4",
+                             outlier_pattern=None, **kw)
+            rows[f"{dname}/{mname}"] = p
+            emit(f"table4/{dname}/{mname}", us, f"ppl={p:.3f}")
+    return rows
+
+
+def table4_ebft():
+    """EBFT rows of Table 4 (blockwise fine-tune of the 2:4 model)."""
+    from .ebft_bench import run_ebft_row
+    cfg, params = get_trained()
+    rows = {}
+    for mname, kw in (("ria_ebft", dict(scorer="ria", use_smoothquant=False,
+                                        use_variance_correction=False)),
+                      ("ria_sq_vc_ebft", dict(scorer="ria", use_smoothquant=True,
+                                              use_variance_correction=True))):
+        p, us = run_ebft_row(cfg, params, DATA_WIKI, weight_pattern="2:4", **kw)
+        rows[mname] = p
+        emit(f"table4/wikitext2/{mname}", us, f"ppl={p:.3f}")
+    return rows
+
+
+def table5_magnitude_outliers():
+    """Magnitude pruning +- structured 4:256 outliers, two model widths."""
+    _, params = get_trained()
+    rows = {}
+    for tag, cfg_mod in (("base", {}),
+                         ("wide", dict(d_model=384, n_heads=6, n_kv_heads=6))):
+        cfg = dataclasses.replace(BENCH_CFG, **cfg_mod)
+        if tag == "wide":
+            # train the wider sibling briefly (role of LLaMA-13B vs 7B)
+            from repro.eval.harness import train_small_lm
+            params_w, _ = train_small_lm(cfg, DATA_WIKI, steps=250, lr=3e-3)
+            p_use = params_w
+        else:
+            p_use = params
+        stats = stats_for(cfg, p_use, DATA_WIKI)
+        for op in (None, "4:256"):
+            p, us = _run(cfg, p_use, stats, DATA_WIKI, weight_pattern="2:4",
+                         outlier_pattern=op, scorer="magnitude",
+                         use_smoothquant=False, use_variance_correction=False)
+            rows[f"{tag}/{op}"] = p
+            emit(f"table5/{tag}/outliers={op}", us, f"ppl={p:.3f}")
+    return rows
+
+
+def table6_grid():
+    """{2:4, 8:16} x outliers {-, 4:256, 8:256, 16:256}, RIA+SQ(+VC)."""
+    cfg, params = get_trained()
+    stats = stats_for(cfg, params, DATA_WIKI)
+    rows = {}
+    for pat in ("2:4", "8:16"):
+        for op in (None, "4:256", "8:256", "16:256"):
+            for vc in (False, True):
+                p, us = _run(cfg, params, stats, DATA_WIKI, weight_pattern=pat,
+                             outlier_pattern=op, scorer="ria",
+                             use_smoothquant=True, use_variance_correction=vc)
+                key = f"{pat}/out={op}/vc={int(vc)}"
+                rows[key] = p
+                emit(f"table6/{key}", us, f"ppl={p:.3f}")
+    return rows
+
+
+def table7_struct_vs_unstruct():
+    """Structured vs unstructured salient weights at matched budget."""
+    cfg, params = get_trained()
+    stats = stats_for(cfg, params, DATA_WIKI)
+    rows = {}
+    for op in ("4:256", "8:256", "16:256"):
+        for unstruct in (False, True):
+            p, us = _run(cfg, params, stats, DATA_WIKI, weight_pattern="8:16",
+                         outlier_pattern=op, scorer="ria", use_smoothquant=True,
+                         use_variance_correction=True,
+                         unstructured_outliers=unstruct)
+            key = f"{op}/{'unstructured' if unstruct else 'structured'}"
+            rows[key] = p
+            emit(f"table7/{key}", us, f"ppl={p:.3f}")
+    return rows

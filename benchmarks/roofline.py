@@ -1,0 +1,193 @@
+"""Roofline analysis from the dry-run JSONs (assignment deliverable g).
+
+Per (arch x shape) on the single-pod 16x16 mesh (256 chips):
+
+  compute    = HLO_flops_per_dev / 197e12
+  memory     = HLO_bytes_per_dev / 819e9
+  collective = collective_bytes_per_dev / 50e9
+
+HLO terms use the depth-probe extrapolation when available (lax.scan bodies
+are cost-counted once — DESIGN.md §6); the scan-path numbers are kept as a
+lower bound.  MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (inference);
+ratio = MODEL_FLOPS / HLO_flops measures how much compiled compute is useful.
+
+The per-cell roofline fraction reported in EXPERIMENTS.md §Perf:
+  ideal  = max(MODEL_FLOPS_per_dev/peak, min_bytes_per_dev/bw)
+  actual = max(compute, memory, collective)
+  fraction = ideal / actual
+with min_bytes = weight (+KV for decode) traffic lower bound (x6 params for
+train: fwd read, bwd read, grad write, opt m/v read+write at bf16).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import SHAPES, get
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = 256
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def model_flops(cfg, shape) -> float:
+    """Global useful FLOPs for one step."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.tokens
+    return 2.0 * n_act * shape.global_batch          # decode: 1 token/seq
+
+
+def min_bytes(cfg, shape) -> float:
+    """Global HBM-traffic lower bound for one step (bf16 weights)."""
+    pbytes = cfg.param_count() * 2.0
+    if shape.kind == "train":
+        return 6.0 * pbytes
+    if shape.kind == "prefill":
+        return pbytes + shape.tokens * cfg.d_model * 2
+    kv = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * shape.seq_len
+          * shape.global_batch * 2.0) if cfg.family not in ("ssm",) else 0.0
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.attn_every, 1)
+        kv = 2 * n_attn * cfg.n_kv_heads * cfg.hd * shape.seq_len \
+            * shape.global_batch * 2.0
+    return pbytes + kv
+
+
+def load_cell(arch: str, shape_name: str, mesh="pod16x16") -> dict | None:
+    fn = RESULTS / "dryrun" / f"{arch}__{shape_name}__{mesh}.json"
+    if not fn.exists():
+        return None
+    return json.loads(fn.read_text())
+
+
+def analyse_cell(arch: str, shape_name: str) -> dict | None:
+    rec = load_cell(arch, shape_name)
+    if rec is None:
+        return None
+    if rec.get("status") == "skipped":
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": rec.get("reason", "")}
+    if rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name, "status": "error",
+                "reason": rec.get("error", "")}
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+
+    probe = rec.get("probe")
+    src = "probe" if probe else "scan"
+    flops_dev = (probe or rec["full"])["flops"]
+    bytes_dev = (probe or rec["full"])["bytes_accessed"]
+    coll_dev = (probe["collective_bytes"] if probe
+                else rec["full"]["collective_bytes"].get("total", 0.0))
+
+    compute = flops_dev / PEAK
+    memory = bytes_dev / HBM
+    collective = coll_dev / ICI
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    mb = min_bytes(cfg, shape)
+    ideal = max(mf / CHIPS / PEAK, mb / CHIPS / HBM)
+    actual = max(terms.values())
+    mem_stats = rec["full"]["memory"]
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok", "src": src,
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": flops_dev * CHIPS,
+        "useful_ratio": mf / max(flops_dev * CHIPS, 1.0),
+        "ideal_s": ideal, "fraction": ideal / max(actual, 1e-30),
+        "args_gib": mem_stats.get("argument_size_in_bytes", 0) / 2**30,
+        "temp_gib": mem_stats.get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def all_cells():
+    from repro.configs import ASSIGNED
+    rows = []
+    for arch in ASSIGNED:
+        for shape_name in SHAPES:
+            r = analyse_cell(arch, shape_name)
+            if r is not None:
+                rows.append(r)
+    return rows
+
+
+def sparse_comparison(arch: str, shape_name: str) -> dict | None:
+    """§Perf cell A: dense vs sparse(-quant) deploy roofline terms."""
+    out = {}
+    for tag, mesh in (("dense", "pod16x16"), ("sparse", "pod16x16_sparse"),
+                      ("sparse+int8", "pod16x16_sparseq")):
+        rec = load_cell(arch, shape_name, mesh)
+        if rec is None or rec.get("status") != "ok":
+            continue
+        # use the scan-path ("full") numbers for ALL variants so the
+        # comparison is apples-to-apples (sparse cells ship without probes)
+        flops = rec["full"]["flops"]
+        bytes_ = rec["full"]["bytes_accessed"]
+        coll = rec["full"]["collective_bytes"].get("total", 0.0)
+        out[tag] = {
+            "compute_s": flops / PEAK, "memory_s": bytes_ / HBM,
+            "collective_s": coll / ICI,
+            "args_gib": rec["full"]["memory"].get("argument_size_in_bytes", 0) / 2**30,
+        }
+    return out or None
+
+
+def run():
+    from .common import emit
+    rows = all_cells()
+    for r in rows:
+        if r["status"] != "ok":
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                 f"status={r['status']}")
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dom={r['dominant']};comp_s={r['compute_s']:.3e};"
+             f"mem_s={r['memory_s']:.3e};coll_s={r['collective_s']:.3e};"
+             f"useful={r['useful_ratio']:.2f};frac={r['fraction']:.2f};"
+             f"src={r['src']}")
+    # also write a markdown table for EXPERIMENTS.md
+    out = RESULTS / "roofline_table.md"
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant "
+             "| MODEL/HLO flops | roofline frac | temp GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']}: {r['reason'][:60]} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} |"
+            f" {r['useful_ratio']:.2f} | {r['fraction']:.2f} | "
+            f"{r['temp_gib']:.1f} |")
+    out.write_text("\n".join(lines) + "\n")
+    print(f"# wrote {out}")
+
+    # paper-technique serving comparison (where sparse cells exist)
+    for arch in ("qwen3-8b", "qwen2-vl-72b", "internlm2-1.8b", "gemma-7b"):
+        for shape_name in ("decode_32k", "prefill_32k"):
+            cmp = sparse_comparison(arch, shape_name)
+            if cmp and len(cmp) > 1:
+                d = cmp.get("dense")
+                for tag, r in cmp.items():
+                    speed = (d["memory_s"] / r["memory_s"]
+                             if d and r["memory_s"] else float("nan"))
+                    emit(f"sparse_deploy/{arch}/{shape_name}/{tag}",
+                         r["memory_s"] * 1e6,
+                         f"mem_s={r['memory_s']:.3e};comp_s={r['compute_s']:.3e};"
+                         f"args_gib={r['args_gib']:.2f};mem_term_speedup={speed:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark entry point — one function per paper table + kernel micro +
+roofline.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only tableN|kernels|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table1|table4|table4_ebft|table5|table6|table7|"
+                         "kernels|roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow EBFT rows")
+    args = ap.parse_args()
+
+    from . import kernels_micro, roofline
+    from . import paper_tables as pt
+
+    jobs = {
+        "table1": pt.table1_patterns,
+        "table4": pt.table4_ablation,
+        "table4_ebft": pt.table4_ebft,
+        "table5": pt.table5_magnitude_outliers,
+        "table6": pt.table6_grid,
+        "table7": pt.table7_struct_vs_unstruct,
+        "kernels": kernels_micro.run,
+        "roofline": roofline.run,
+    }
+    if args.fast:
+        jobs.pop("table4_ebft")
+    if args.only:
+        jobs = {args.only: jobs[args.only]}
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in jobs.items():
+        t1 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — report per-table failures
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stderr)
+            raise
+        print(f"# {name} done in {time.time()-t1:.0f}s", file=sys.stderr)
+    print(f"# all benchmarks in {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Batched serving with compressed 8:16 weights (paper deployment story).
+
+Loads a model, swaps every projection for its compressed SparseWeight form,
+and serves a batch of prompts through prefill + decode — demonstrating that
+the whole zoo serves sparse through the same `linear()` dispatch.
+
+    PYTHONPATH=src python examples/serve_sparse.py --arch internlm2-1.8b
+    (any assigned arch id works; smoke-sized variants keep it CPU-friendly)
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--dense", action="store_true",
+                    help="serve dense weights instead (for comparison)")
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--smoke-arch",
+            "--batch", str(args.batch), "--prompt-len", str(args.prompt_len),
+            "--gen", str(args.gen)]
+    if not args.dense:
+        argv.append("--sparse")
+    serve_main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Architecture registry: repro.configs.get("qwen3-8b") etc."""
+
+from .base import (ModelConfig, MoEConfig, ShapeConfig, SHAPES, ASSIGNED,
+                   PAPER_ARCHS, get, all_archs, register, shape_applicable)
+
+
+def get_smoke(name: str) -> ModelConfig:
+    """Resolve the reduced smoke config for an assigned arch id."""
+    import importlib
+    mod_by_arch = {
+        "qwen2-vl-72b": "qwen2_vl_72b",
+        "xlstm-350m": "xlstm_350m",
+        "gemma-7b": "gemma_7b",
+        "qwen3-8b": "qwen3_8b",
+        "internlm2-1.8b": "internlm2_1_8b",
+        "nemotron-4-340b": "nemotron4_340b",
+        "mixtral-8x7b": "mixtral_8x7b",
+        "llama4-maverick-400b-a17b": "llama4_maverick",
+        "whisper-medium": "whisper_medium",
+        "zamba2-2.7b": "zamba2_2_7b",
+        "llama-paper": "paper_models",
+    }
+    mod = importlib.import_module(f".{mod_by_arch[name]}", __package__)
+    return mod.smoke()

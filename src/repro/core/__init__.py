@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — N:M sparsity with structured outliers,
+SmoothQuant-style equalization, variance correction, EBFT."""
+
+from .patterns import (Pattern, parse_pattern, nm_mask, topn_block_mask,
+                       validate_nm_mask, block_topn_indices, mask_sparsity,
+                       WEIGHT_PATTERNS, OUTLIER_PATTERNS)
+from .scoring import ActStats, score, magnitude_score, wanda_score, ria_score
+from .equalize import (smoothquant_scales, equalize_weights,
+                       equalized_view_for_scoring)
+from .variance import variance_correction_factor, apply_variance_correction
+from .outliers import (StructuredOutliers, extract_structured_outliers,
+                       unstructured_outlier_mask, structured_outlier_mask)
+from .packing import PackedNM, pack_nm, unpack_metadata, compression_report
+from .pipeline import (SparsifyConfig, SparsifiedLinear, sparsify_linear,
+                       sparsify_tree, dense_effective_weight)
+from .ebft import EBFTConfig, ebft_block, masked_adam_init, masked_adam_step

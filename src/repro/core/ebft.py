@@ -1,0 +1,135 @@
+"""EBFT — Efficient Blockwise Fine-Tuning (Guo et al., 2024; paper stage 4).
+
+The model is split into independent blocks (here: one transformer block =
+one EBFT unit).  For each block, with a frozen sparsity mask M, we minimize the
+block-output reconstruction error against the *dense* block's outputs on
+calibration data, updating only the non-salient kept weights:
+
+    min_{W ⊙ M}  || f_block(X; W ⊙ M) - f_block(X; W_dense) ||_F^2
+
+Gradients are projected through the mask each step (W stays exactly N:M +
+outlier structured).  We use Adam on the masked weights; norm parameters are
+also trainable (the paper fine-tunes "only W_nonsalient and BatchNorm
+parameters" — transformer blocks have RMSNorm scales, which play that role).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EBFTConfig:
+    steps: int = 100
+    lr: float = 1e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    batch_size: int = 8
+    train_norms: bool = True
+
+
+def _is_norm_path(name: str) -> bool:
+    return "norm" in name.lower() or "scale" in name.lower()
+
+
+def masked_adam_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return dict(m=zeros, v=jax.tree.map(jnp.copy, zeros), step=jnp.zeros((), jnp.int32))
+
+
+def masked_adam_step(params, grads, state, masks, cfg: EBFTConfig):
+    """One Adam step; gradient (and hence update) is zeroed off-mask.
+
+    ``masks`` mirrors params: bool array for masked leaves, ``None`` (leaf)
+    entries mean fully trainable, ``False`` scalar means frozen.
+    """
+    step = state["step"] + 1
+
+    def upd(p, g, m, v, mask):
+        if mask is False:
+            return p, m, v
+        g = g.astype(jnp.float32)
+        if mask is not None and mask is not True:
+            g = g * mask.astype(jnp.float32)
+        m_new = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v_new = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mhat = m_new / (1 - cfg.beta1 ** step)
+        vhat = v_new / (1 - cfg.beta2 ** step)
+        delta = cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p_new = (p.astype(jnp.float32) - delta)
+        if mask is not None and mask is not True:
+            p_new = p_new * mask.astype(jnp.float32)  # keep exact sparsity
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_mask = tdef.flatten_up_to(masks)
+    out = [upd(p, g, m, v, mk) for p, g, m, v, mk in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_mask)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, dict(m=new_m, v=new_v, step=step)
+
+
+def ebft_block(block_fn: Callable, sparse_params, dense_params, masks,
+               calib_inputs: jax.Array, cfg: EBFTConfig,
+               extra_inputs: tuple = ()) -> tuple:
+    """Fine-tune one block to match its dense teacher.
+
+    block_fn(params, x, *extra) -> y.  ``masks`` mirrors sparse_params with
+    bool masks on pruned weight leaves, True on norm leaves (if
+    cfg.train_norms), False elsewhere.  ``calib_inputs``: [n_calib, ...]
+    inputs to the block recorded from the dense model.
+
+    Returns (tuned_params, losses[steps]).
+    """
+    targets = block_fn(dense_params, calib_inputs, *extra_inputs)
+
+    def loss_fn(p, x, y):
+        pred = block_fn(p, x, *extra_inputs)
+        return jnp.mean((pred.astype(jnp.float32) - y.astype(jnp.float32)) ** 2)
+
+    opt = masked_adam_init(sparse_params)
+    n = calib_inputs.shape[0]
+    bs = min(cfg.batch_size, n)
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o = masked_adam_step(p, g, o, masks, cfg)
+        return p, o, l
+
+    params = sparse_params
+    losses = []
+    for i in range(cfg.steps):
+        s = (i * bs) % max(n - bs + 1, 1)
+        params, opt, l = step(params, opt, calib_inputs[s:s + bs], targets[s:s + bs])
+        losses.append(float(l))
+    return params, losses
+
+
+def make_block_masks(sparse_params, mask_by_path: dict, train_norms: bool = True):
+    """Build the mask pytree for one block's params.
+
+    mask_by_path: {leaf path: bool array} for pruned weights; norm scales get
+    True (trainable), everything else False (frozen).
+    """
+    flat, tdef = jax.tree_util.tree_flatten_with_path(sparse_params)
+    masks = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if name in mask_by_path:
+            masks.append(mask_by_path[name])
+        elif train_norms and _is_norm_path(name):
+            masks.append(True)
+        else:
+            masks.append(False)
+    return tdef.unflatten(masks)

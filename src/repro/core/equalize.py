@@ -1,0 +1,62 @@
+"""SmoothQuant-inspired weight equalization (paper §4.1).
+
+Channel-wise scaling factors  s_j = max|x_j| / max|W_:,j|  redistribute
+importance between activations and weights:
+
+    W_ec = W @ diag(s)^-1 ,   x_scaled = x * s        (Eq. 1)
+
+Crucially (paper "Implementation Note"): W_ec is used ONLY to compute the
+pruning importance metric.  The stored weights and the model's activations are
+never changed — equalization reshapes the score landscape so RIA separates
+salient from non-salient weights more cleanly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def smoothquant_scales(w: jax.Array, act_max_abs: jax.Array,
+                       alpha: float | None = None) -> jax.Array:
+    """Per-input-channel scales s_j.
+
+    Default (paper Eq. 1): s_j = max|x_j| / max|W_:,j|.
+    With ``alpha`` given, uses the original SmoothQuant interpolation
+    s_j = max|x_j|^alpha / max|W_:,j|^(1-alpha).
+    """
+    w_max = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)      # [in]
+    x_max = act_max_abs.astype(jnp.float32)
+    if alpha is None:
+        s = x_max / (w_max + EPS)
+    else:
+        s = (x_max + EPS) ** alpha / (w_max + EPS) ** (1.0 - alpha)
+    # Guard degenerate channels (dead activations): scale 1.
+    return jnp.where(x_max <= EPS, 1.0, jnp.maximum(s, EPS))
+
+
+def equalize_weights(w: jax.Array, scales: jax.Array) -> jax.Array:
+    """W_ec = W * s_j  per input channel.
+
+    Note the sign convention: with x_scaled = x / s_j the product is invariant
+    when W_ec = W * s_j.  The paper writes W·S^-1 with x·S; either direction is
+    mathematically equivalent — what matters for scoring is that channels with
+    large activations get their weights *inflated* in the metric so RIA keeps
+    them.  We fold the activation magnitude INTO the weight copy used for
+    scoring (importance must rise with activation scale).
+    """
+    return w * scales[None, :].astype(w.dtype)
+
+
+def equalized_view_for_scoring(w: jax.Array, act_max_abs: jax.Array,
+                               alpha: float | None = None) -> jax.Array:
+    """The W_ec used by the pipeline's scoring stage (weights unchanged)."""
+    return equalize_weights(w, smoothquant_scales(w, act_max_abs, alpha))
+
+
+def check_equivalence(w: jax.Array, x: jax.Array, scales: jax.Array):
+    """(W*s)(x/s) == W x — the Eq. 1 invariant; used by tests."""
+    lhs = (x / scales) @ equalize_weights(w, scales).T
+    rhs = x @ w.T
+    return lhs, rhs

@@ -1,0 +1,80 @@
+"""Salient-weight ("outlier") extraction — structured and unstructured.
+
+SSP-for-SW (paper contribution 2): the most important weights are *recovered*
+from the N:M-pruned matrix and stored in a separate high-compression structured
+pattern (4:256, 8:256, 16:256 — 1.56% / 3.13% / 6.25% density).  Compared to
+SpQR's unstructured CSR this gives predictable memory access and O(1)
+per-block metadata.
+
+The unstructured baseline (global top-k at matched budget) is implemented for
+the paper's Table 7 comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .patterns import Pattern, parse_pattern, topn_block_mask, block_topn_indices
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StructuredOutliers:
+    """N:256-pattern salient weights of one linear layer.
+
+    values : [out, n_blocks, n]  — exact dense values of the salient weights
+    indices: [out, n_blocks, n]  — int32 position of each value inside its
+                                   256-wide input block (ascending)
+    Block b of output row o covers input columns [b*m, (b+1)*m).
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def out_dim(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def in_dim(self) -> int:
+        return self.values.shape[1] * self.m
+
+    def to_dense(self) -> jax.Array:
+        """Scatter back to a dense [out, in] matrix (zeros elsewhere)."""
+        out, nb, n = self.values.shape
+        onehot = jax.nn.one_hot(self.indices, self.m, dtype=self.values.dtype)
+        dense_blocks = jnp.einsum("obn,obnm->obm", self.values, onehot)
+        return dense_blocks.reshape(out, nb * self.m)
+
+    def mask(self) -> jax.Array:
+        """Boolean [out, in] mask of salient positions."""
+        onehot = jax.nn.one_hot(self.indices, self.m, dtype=jnp.int32)
+        return (onehot.sum(axis=2) > 0).reshape(self.values.shape[0], -1)
+
+
+def extract_structured_outliers(w: jax.Array, scores: jax.Array,
+                                pattern) -> StructuredOutliers:
+    """Keep the top-N scores per 256-block of each row as exact values."""
+    p = parse_pattern(pattern)
+    idx = block_topn_indices(scores, p.n, p.m)               # [out, nb, n]
+    out, nb, n = idx.shape
+    blocks = w.reshape(out, nb, p.m)
+    values = jnp.take_along_axis(blocks, idx, axis=-1)
+    return StructuredOutliers(values=values, indices=idx, n=p.n, m=p.m)
+
+
+def unstructured_outlier_mask(scores: jax.Array, budget_fraction: float) -> jax.Array:
+    """Global top-k mask at a matched parameter budget (Table 7 baseline)."""
+    k = max(1, int(round(budget_fraction * scores.size)))
+    flat = scores.reshape(-1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return scores >= thresh
+
+
+def structured_outlier_mask(scores: jax.Array, pattern) -> jax.Array:
+    p = parse_pattern(pattern)
+    return topn_block_mask(scores, p.n, p.m)

@@ -1,0 +1,97 @@
+"""Weight-importance metrics for pruning.
+
+Implemented metrics (all return a score matrix shaped like ``W``; higher is
+more important):
+
+- ``magnitude``:  |W|                                  (classic baseline)
+- ``wanda``:      |W| * ||x_j||_2                      (Sun et al., 2023)
+- ``ria``:        (|W_ij|/sum_i|W_ij| + |W_ij|/sum_j|W_ij|) * ||x_j||_2^a
+                                                        (Zhang et al., 2024)
+
+Activation statistics come from a calibration pass: ``ActStats`` accumulates
+the per-input-channel L2 norm and max-abs over calibration batches, exactly the
+statistics RIA / Wanda / SmoothQuant need.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ActStats:
+    """Streaming per-channel activation statistics (input dim of a linear)."""
+
+    sq_sum: jax.Array   # [in]  sum of x_j^2 over all calibration tokens
+    max_abs: jax.Array  # [in]  max |x_j|
+    count: jax.Array    # []    number of tokens seen
+
+    @staticmethod
+    def init(in_dim: int, dtype=jnp.float32) -> "ActStats":
+        return ActStats(
+            sq_sum=jnp.zeros((in_dim,), dtype),
+            max_abs=jnp.zeros((in_dim,), dtype),
+            count=jnp.zeros((), dtype),
+        )
+
+    def update(self, x: jax.Array) -> "ActStats":
+        """x: [..., in] activation batch feeding this linear layer."""
+        xf = x.reshape(-1, x.shape[-1]).astype(self.sq_sum.dtype)
+        return ActStats(
+            sq_sum=self.sq_sum + jnp.sum(xf * xf, axis=0),
+            max_abs=jnp.maximum(self.max_abs, jnp.max(jnp.abs(xf), axis=0)),
+            count=self.count + xf.shape[0],
+        )
+
+    @property
+    def l2(self) -> jax.Array:
+        """||x_j||_2 over the calibration set."""
+        return jnp.sqrt(self.sq_sum + EPS)
+
+
+def magnitude_score(w: jax.Array, stats: ActStats | None = None) -> jax.Array:
+    return jnp.abs(w)
+
+
+def wanda_score(w: jax.Array, stats: ActStats) -> jax.Array:
+    """|W_ij| * ||x_j||_2 ; W is [out, in], stats over in."""
+    return jnp.abs(w) * stats.l2[None, :]
+
+
+@partial(jax.jit, static_argnames=("alpha",))
+def ria_score(w: jax.Array, act_l2: jax.Array, alpha: float = 0.5) -> jax.Array:
+    """Relative Importance and Activations (RIA).
+
+    score_ij = (|W_ij| / sum_row_i + |W_ij| / sum_col_j) * (||x_j||_2)^alpha
+    with sums of |W| along the row (input dim) and column (output dim).
+    """
+    a = jnp.abs(w.astype(jnp.float32))
+    row_sum = a.sum(axis=1, keepdims=True)   # [out, 1] over inputs
+    col_sum = a.sum(axis=0, keepdims=True)   # [1, in]  over outputs
+    rel = a / (row_sum + EPS) + a / (col_sum + EPS)
+    return rel * (act_l2[None, :] + EPS) ** alpha
+
+
+SCORERS = ("magnitude", "wanda", "ria")
+
+
+def score(method: str, w: jax.Array, stats: ActStats | None = None,
+          alpha: float = 0.5) -> jax.Array:
+    """Dispatch. ``stats`` required for wanda/ria."""
+    if method == "magnitude":
+        return magnitude_score(w)
+    if method == "wanda":
+        if stats is None:
+            raise ValueError("wanda requires activation stats")
+        return wanda_score(w, stats)
+    if method == "ria":
+        if stats is None:
+            raise ValueError("ria requires activation stats")
+        return ria_score(w, stats.l2, alpha)
+    raise ValueError(f"unknown scorer {method!r}; options: {SCORERS}")

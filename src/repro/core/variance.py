@@ -1,0 +1,52 @@
+"""Variance Correction (paper §4.2, Eq. 2).
+
+Pruning removes ~50% of each layer's weights, shrinking the variance of the
+weight distribution and hence of the layer's pre-activations.  VC rescales the
+surviving non-salient weights so the *dense* weight variance is restored:
+
+    W_kept_corrected = W_kept * sqrt( Var(W_dense) / (Var(W_kept) + eps) )
+
+Only non-salient kept weights are rescaled; salient (outlier) weights are
+stored exactly.  Variance is computed per weight matrix (the paper's layer-wise
+granularity); a per-output-row mode is provided as a beyond-paper knob.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def _masked_var(w: jax.Array, mask: jax.Array, axis=None):
+    """Variance of w over entries where mask is True (biased, like jnp.var)."""
+    wf = w.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    n = jnp.sum(m, axis=axis, keepdims=axis is not None)
+    mean = jnp.sum(wf * m, axis=axis, keepdims=axis is not None) / jnp.maximum(n, 1.0)
+    var = jnp.sum(m * (wf - mean) ** 2, axis=axis, keepdims=axis is not None) / jnp.maximum(n, 1.0)
+    return var
+
+
+def variance_correction_factor(w_dense: jax.Array, kept_mask: jax.Array,
+                               per_row: bool = False) -> jax.Array:
+    """sqrt(Var(W_dense) / (Var(W_kept) + eps)).
+
+    ``kept_mask`` marks the surviving non-salient weights.  ``per_row=True``
+    computes the factor per output row (axis=1) instead of per matrix.
+    """
+    axis = 1 if per_row else None
+    var_dense = jnp.var(w_dense.astype(jnp.float32), axis=axis,
+                        keepdims=per_row)
+    var_kept = _masked_var(w_dense, kept_mask, axis=axis)
+    factor = jnp.sqrt(var_dense / (var_kept + EPS))
+    # If a row kept nothing (degenerate), leave it alone.
+    return jnp.where(jnp.isfinite(factor), factor, 1.0)
+
+
+def apply_variance_correction(w_dense: jax.Array, kept_mask: jax.Array,
+                              per_row: bool = False) -> jax.Array:
+    """Return pruned-and-corrected weights: zeros off-mask, rescaled on-mask."""
+    factor = variance_correction_factor(w_dense, kept_mask, per_row)
+    w_kept = jnp.where(kept_mask, w_dense.astype(jnp.float32), 0.0)
+    return (w_kept * factor).astype(w_dense.dtype)

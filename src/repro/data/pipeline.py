@@ -1,0 +1,89 @@
+"""Deterministic sharded token pipeline + calibration sets.
+
+Sources:
+  SyntheticLM   — a fixed-seed Zipf-ish Markov token stream with enough
+                  structure (bigram dependencies) that perplexity orderings
+                  between pruning methods are meaningful on CPU (the paper's
+                  WikiText-2/C4 stand-in for this offline container; two
+                  different seeds play the role of the two calibration sets).
+  TextFile      — newline documents with a whitespace/byte vocab (offline
+                  friendly, used if the user points us at a corpus).
+
+Determinism/resume: batches are a pure function of (seed, step, host) —
+``batch_at(step)`` — so restart-from-checkpoint replays the exact stream
+(fault_tolerance relies on this), and each host reads only its shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    batch: int                      # per-host batch
+    seed: int = 0                   # structure seed (the "language")
+    branching: int = 12             # bigram fan-out; lower = more learnable
+    stream_seed: int | None = None  # sampling seed; two corpora of the SAME
+                                    # language = same seed, diff stream_seed
+
+    def __post_init__(self):
+        if self.stream_seed is None:
+            self.stream_seed = self.seed
+        rng = np.random.default_rng(self.seed)
+        # Markov transition table: each token can be followed by `branching`
+        # candidates with Zipf weights.
+        self._next = rng.integers(0, self.vocab,
+                                  size=(self.vocab, self.branching))
+        w = 1.0 / np.arange(1, self.branching + 1)
+        self._w = w / w.sum()
+
+    def batch_at(self, step: int, host: int = 0) -> dict:
+        rng = np.random.default_rng(
+            (self.stream_seed * 1_000_003 + step) * 131 + host)
+        toks = np.empty((self.batch, self.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, size=self.batch)
+        for t in range(self.seq_len):
+            choice = rng.choice(self.branching, size=self.batch, p=self._w)
+            toks[:, t + 1] = self._next[toks[:, t], choice]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def calibration(self, n_batches: int, start_step: int = 10_000) -> list[dict]:
+        """A held-out slice used as the pruning calibration set."""
+        return [self.batch_at(start_step + i) for i in range(n_batches)]
+
+
+@dataclasses.dataclass
+class TextFile:
+    path: str
+    seq_len: int
+    batch: int
+    seed: int = 0
+
+    def __post_init__(self):
+        raw = open(self.path, "rb").read()
+        self._data = np.frombuffer(raw, np.uint8).astype(np.int32)
+        self.vocab = 256
+
+    def batch_at(self, step: int, host: int = 0) -> dict:
+        rng = np.random.default_rng((self.seed + step) * 131 + host)
+        starts = rng.integers(0, len(self._data) - self.seq_len - 1,
+                              size=self.batch)
+        toks = np.stack([self._data[s:s + self.seq_len + 1] for s in starts])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def prefetch(source, steps, start: int = 0, host: int = 0, depth: int = 2):
+    """Generator with a simple lookahead buffer (threaded IO would slot in
+    here on a real cluster; on CPU the synthetic source is cheap)."""
+    from collections import deque
+    buf = deque()
+    for s in range(start, start + steps):
+        buf.append(source.batch_at(s, host))
+        if len(buf) > depth:
+            yield buf.popleft()
+    while buf:
+        yield buf.popleft()

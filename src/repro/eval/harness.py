@@ -1,0 +1,144 @@
+"""Evaluation harness: small-LM training, calibration-stats collection,
+model-level sparsification, and perplexity — the machinery behind the
+paper-table benchmarks and the system tests.
+
+Works on the dense/llama family (what the paper evaluates).  Stats collection
+runs an instrumented unrolled forward that accumulates per-projection input
+statistics (L2 norm + max-abs per channel), exactly what RIA / Wanda /
+SmoothQuant consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (ActStats, SparsifyConfig, sparsify_tree)
+from ..models import get_model
+from ..models import transformer as tfm
+from ..models.layers import linear, rms_norm, activation
+from ..optim import AdamWConfig, adamw_init, adamw_step
+
+
+# --------------------------------------------------------------------------
+# small-LM training
+# --------------------------------------------------------------------------
+
+def train_small_lm(cfg, data, steps: int = 200, lr: float = 3e-3,
+                   seed: int = 0, log_every: int = 0):
+    zoo = get_model(cfg)
+    params = zoo.init(jax.random.PRNGKey(seed))
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.01)
+    opt = adamw_init(params, ocfg)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: zoo.loss(p, batch), has_aux=True)(params)
+        params, opt, _ = adamw_step(params, grads, opt, ocfg)
+        return params, opt, loss
+
+    losses = []
+    for s in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch_at(s))
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+        if log_every and s % log_every == 0:
+            print(f"  step {s:4d} loss {losses[-1]:.4f}")
+    return params, losses
+
+
+# --------------------------------------------------------------------------
+# calibration statistics (instrumented dense-transformer forward)
+# --------------------------------------------------------------------------
+
+def _init_stats(cfg):
+    L = cfg.n_layers
+    d, ff = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def mk(in_dim):
+        return ActStats(sq_sum=jnp.zeros((L, in_dim)),
+                        max_abs=jnp.zeros((L, in_dim)),
+                        count=jnp.zeros((L,)))
+    stats = {"layers/wq": mk(d), "layers/wk": mk(d), "layers/wv": mk(d),
+             "layers/wo": mk(H * hd), "layers/w_up": mk(d),
+             "layers/w_down": mk(ff)}
+    if cfg.glu:
+        stats["layers/w_gate"] = mk(d)
+    return stats
+
+
+def _upd(stats, key, i, x):
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    s = stats[key]
+    stats[key] = ActStats(
+        sq_sum=s.sq_sum.at[i].add(jnp.sum(xf * xf, axis=0)),
+        max_abs=s.max_abs.at[i].max(jnp.max(jnp.abs(xf), axis=0)),
+        count=s.count.at[i].add(xf.shape[0]))
+    return stats
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _stats_forward(params, tokens, stats, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda p: p[i], params["layers"])
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        for k in ("wq", "wk", "wv"):
+            stats = _upd(stats, f"layers/{k}", i, h)
+        q, k_, v = tfm._project_qkv(lp, h, cfg, positions)
+        from ..models.layers import sdpa
+        attn = sdpa(q, k_, v, causal=True, window=cfg.window)
+        attn2 = attn.reshape(*attn.shape[:2], -1)
+        stats = _upd(stats, "layers/wo", i, attn2)
+        x = x + linear(lp["wo"], attn2)
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        stats = _upd(stats, "layers/w_up", i, h)
+        if cfg.glu:
+            stats = _upd(stats, "layers/w_gate", i, h)
+            hidden = activation(cfg.act, linear(lp["w_gate"], h)) \
+                * linear(lp["w_up"], h)
+        else:
+            hidden = activation(cfg.act, linear(lp["w_up"], h))
+        stats = _upd(stats, "layers/w_down", i, hidden)
+        x = x + linear(lp["w_down"], hidden)
+    return stats
+
+
+def collect_activation_stats(cfg, params, calib_batches) -> dict:
+    """Returns {leaf path -> ActStats with leading [L] dim} for sparsify_tree."""
+    stats = _init_stats(cfg)
+    for batch in calib_batches:
+        stats = _stats_forward(params, jnp.asarray(batch["tokens"]), stats, cfg)
+    return stats
+
+
+# --------------------------------------------------------------------------
+# model-level sparsification + PPL
+# --------------------------------------------------------------------------
+
+def sparsify_model(cfg, params, stats, scfg: SparsifyConfig):
+    """Apply the pipeline to every projection; returns dense-effective params."""
+    new_params, _records = sparsify_tree(params, stats or {}, scfg)
+    return new_params
+
+
+def eval_ppl(cfg, params, data, n_batches: int = 8, start_step: int = 50_000):
+    zoo = get_model(cfg)
+
+    @jax.jit
+    def nll(params, batch):
+        loss, _ = zoo.loss(params, batch)
+        return loss
+
+    total = 0.0
+    for i in range(n_batches):
+        batch = jax.tree.map(jnp.asarray, data.batch_at(start_step + i))
+        total += float(nll(params, batch))
+    return float(np.exp(total / n_batches))

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: N:M-compressed weight x dense activation matmul.
+
+TPU adaptation of GPU 2:4 sparse tensor cores (see DESIGN.md §3): the MXU has
+no sparse mode, so the win is HBM *bandwidth* — weights stream compressed
+(values at N/M density + 4-bit packed indices) and are decompressed inside
+VMEM by the VPU just before hitting the MXU.
+
+Layout (produced by core/packing.py):
+  values : [out, in * n/m]   kept values, row-major by block
+  meta   : [out, in/m] int32 per block: n indices packed 4 bits each (m<=16)
+
+Grid: (b_tiles, out_tiles, k_tiles), k innermost; the f32 output tile
+accumulates across k.  Decompression per k-tile:
+
+  idx[o, c, k]  = (meta[o, c] >> 4k) & 0xF              # unpack
+  w[o, c*m + j] = sum_k values[o, c, k] * (idx==j)      # compare-select, VPU
+  y[b, o]      += x[b, :] @ w[o, :]^T                   # MXU
+
+VPU decompress cost is n ops/weight vs 2*B_tile MXU flops/weight, so for
+B_tile >= 8 the decompress is not the bottleneck; the kernel exists to halve
+weight bytes from HBM.  VMEM per step (defaults bB=bO=128, bK=512, bf16):
+x 128K + vals 64K + meta 4K + w_tile 512K + cmp scratch ~2M + acc 64K << 16M.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decompress_tile(values, meta, n: int, m: int, out_dtype):
+    """values [bO, bK//m * n], meta [bO, bK//m] int32 -> dense [bO, bK]."""
+    bo, nc = meta.shape
+    vals = values.reshape(bo, nc, n).astype(jnp.float32)
+    shifts = 4 * jax.lax.iota(jnp.int32, n)                    # [n]
+    idx = (meta[:, :, None] >> shifts[None, None, :]) & 0xF    # [bO, nc, n]
+    j = jax.lax.iota(jnp.int32, m)                             # [m]
+    onehot = (idx[:, :, :, None] == j[None, None, None, :])    # [bO, nc, n, m]
+    dense = jnp.sum(jnp.where(onehot, vals[:, :, :, None], 0.0), axis=2)
+    return dense.reshape(bo, nc * m).astype(out_dtype)
+
+
+def _kernel(x_ref, v_ref, meta_ref, o_ref, acc_ref, *, n, m, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decompress_tile(v_ref[...], meta_ref[...], n, m, jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block_b", "block_o",
+                                             "block_k", "interpret"))
+def nm_spmm(x: jax.Array, values: jax.Array, meta: jax.Array, *,
+            n: int, m: int, block_b: int = 128, block_o: int = 128,
+            block_k: int = 512, interpret: bool = True) -> jax.Array:
+    """y[b, out] = x[b, in] @ decompress(values, meta)^T.
+
+    x: [batch, in]; values: [out, in*n//m]; meta: [out, in//m] int32.
+    Requires batch % block_b == in % block_k == out % block_o == 0 after
+    clamping (tiles are clamped to the array sizes for small shapes).
+    """
+    b, kdim = x.shape
+    out = values.shape[0]
+    assert kdim % m == 0 and values.shape[1] == kdim // m * n
+    assert meta.shape == (out, kdim // m)
+
+    bb = min(block_b, b)
+    bo = min(block_o, out)
+    bk = min(block_k, kdim)
+    assert b % bb == 0 and out % bo == 0 and kdim % bk == 0 and bk % m == 0
+    n_k = kdim // bk
+
+    grid = (b // bb, out // bo, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, m=m, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bo, bk // m * n), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bo, bk // m), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bb, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bo), jnp.float32)],
+        interpret=interpret,
+    )(x, values, meta)

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the right step (train_step / prefill_step / decode_step) with
+     ShapeDtypeStruct inputs + explicit NamedShardings,
+  3. compiles, printing memory_analysis() (fits?) and cost_analysis()
+     (FLOPs/bytes for §Roofline),
+  4. parses collective bytes from the compiled HLO,
+  5. (single-pod) runs depth-probe compiles at two reduced unrolled depths
+     and extrapolates exact per-layer HLO costs (DESIGN.md §6 scan caveat),
+  6. writes one JSON per cell to --out.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ASSIGNED, SHAPES, get, shape_applicable
+from ..models import cache_specs, get_model, input_specs, param_specs
+from ..optim import AdamWConfig, adamw_init
+from ..parallel import (batch_shardings, cache_shardings, param_shardings,
+                        replicated)
+from ..parallel.policy import activation_sharding
+from .hlo_analysis import collective_bytes, collective_counts, cost_summary
+from .mesh import make_production_mesh
+from .steps import TrainOptions, make_decode_step, make_prefill_step, make_train_step
+
+PROBE_DEPTHS = {
+    "dense": (2, 4), "moe": (2, 4), "vlm": (2, 4), "encdec": (2, 4),
+    "ssm": (8, 16), "hybrid": (6, 12),
+}
+
+
+def _opt_cfg(cfg) -> AdamWConfig:
+    big = cfg.param_count() > 1e11
+    return AdamWConfig(state_dtype=jnp.bfloat16 if big else jnp.float32)
+
+
+def _reduce_depth(cfg, L: int):
+    kw = {"n_layers": L}
+    if cfg.family == "encdec":
+        kw["enc_layers"] = L
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_lowered(cfg, shape, mesh, unroll: bool = False,
+                  opts: TrainOptions | None = None, sparse: bool = False,
+                  quant: bool = False):
+    """Lower the cell's step with ShapeDtypeStructs; returns jax Lowered.
+
+    ``sparse=True`` deploys the paper's compressed weights (8:16 + 16:256
+    outliers) in the serving graph — inference shapes only.
+
+    The whole body (incl. eval_shape) runs inside the activation-sharding
+    policy: jax caches the trace at the first abstract evaluation, so the
+    policy must be active for every trace of the step closure."""
+    seq_shard = shape.global_batch == 1
+    with activation_sharding(mesh, seq_shard):
+        params_sds = param_specs(cfg)
+
+        def _shardings(tree):
+            sh = param_shardings(mesh, tree)
+            if cfg.family == "ssm":
+                # xlstm-350m: 1.4M params/chip — TP on block weights only
+                # forces model-axis activation all-gathers (§Perf cell B).
+                # Keep embed/lm_head vocab-sharded; replicate the rest over
+                # `model` (pure DP+FSDP for block weights).
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                def drop_model(path, ns):
+                    name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                                    for k in path)
+                    if "embed" in name or "lm_head" in name:
+                        return ns
+                    spec = tuple(None if ax == "model" or
+                                 (isinstance(ax, tuple) and "model" in ax)
+                                 else ax for ax in ns.spec)
+                    return NamedSharding(mesh, P(*spec))
+                sh = jax.tree_util.tree_map_with_path(drop_model, sh)
+            return sh
+        if sparse:
+            assert shape.kind != "train", "sparse deploy is a serving feature"
+            from ..core import SparsifyConfig
+            from ..models.sparse_serving import sparsify_for_serving
+            scfg = SparsifyConfig(scorer="magnitude", use_smoothquant=False)
+            params_sds = jax.eval_shape(
+                lambda p: sparsify_for_serving(p, scfg, quantize=quant)[0],
+                params_sds)
+        p_shard = _shardings(params_sds)
+        batch = input_specs(cfg, shape)
+        b_shard = batch_shardings(mesh, batch, seq_shard=seq_shard)
+        if opts is None:
+            # >30B models: microbatched gradient accumulation (8x) bounds the
+            # per-layer saved activations of the scan backward (DESIGN.md §7).
+            mb = 8 if (shape.kind == "train" and cfg.param_count() > 30e9) else 1
+            opts = TrainOptions(unroll=unroll, microbatches=mb)
+
+        if shape.kind == "train":
+            ocfg = _opt_cfg(cfg)
+            opt_sds = jax.eval_shape(lambda p: adamw_init(p, ocfg), params_sds)
+            o_shard = _shardings(opt_sds)
+            step = make_train_step(cfg, ocfg, opts)
+            out_sds = jax.eval_shape(step, params_sds, opt_sds, batch)
+            out_shard = (p_shard, o_shard,
+                         jax.tree.map(lambda _: replicated(mesh), out_sds[2]))
+            jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=out_shard, donate_argnums=(0, 1))
+            return jitted.lower(params_sds, opt_sds, batch)
+
+        if shape.kind == "prefill":
+            step = make_prefill_step(cfg, unroll=opts.unroll)
+            out_sds = jax.eval_shape(step, params_sds, batch)
+            logits_sh = cache_shardings(mesh, out_sds[0], seq_shard=False)
+            caches_sh = cache_shardings(mesh, out_sds[1], seq_shard=seq_shard)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                             out_shardings=(logits_sh, caches_sh))
+            return jitted.lower(params_sds, batch)
+
+        # decode
+        step = make_decode_step(cfg, unroll=opts.unroll)
+        caches = cache_specs(cfg, shape)
+        c_shard = cache_shardings(mesh, caches, seq_shard=seq_shard)
+        out_sds = jax.eval_shape(step, params_sds, caches, batch)
+        logits_sh = cache_shardings(mesh, out_sds[0], seq_shard=False)
+        jitted = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard),
+                         out_shardings=(logits_sh, c_shard), donate_argnums=(1,))
+        return jitted.lower(params_sds, caches, batch)
+
+
+def analyse(lowered) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    res = cost_summary(compiled)
+    hlo = compiled.as_text()
+    res["collective_bytes"] = collective_bytes(hlo)
+    res["collective_counts"] = collective_counts(hlo)
+    res["compile_s"] = round(time.time() - t0, 1)
+    return res
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, probe: bool = True,
+             out_dir: pathlib.Path | None = None, verbose: bool = True,
+             sparse: bool = False, quant: bool = False) -> dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    if sparse:
+        mesh_tag += "_sparse"
+    if quant:
+        mesh_tag += "q"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch; long_500k requires sub-quadratic state (DESIGN.md §5)"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        try:
+            lowered = build_lowered(cfg, shape, mesh, sparse=sparse,
+                                    quant=quant)
+            rec["full"] = analyse(lowered)
+            rec["status"] = "ok"
+            if verbose:
+                mem = rec["full"]["memory"]
+                print(f"  [{arch} x {shape_name} x {mesh_tag}] compile ok "
+                      f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB/dev "
+                      f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB/dev "
+                      f"flops={rec['full']['flops']:.3g} "
+                      f"coll={rec['full']['collective_bytes'].get('total',0)/2**20:.1f}MiB")
+        except Exception as e:  # noqa: BLE001 — record the failure, dryrun continues
+            rec["status"] = "error"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+            print(f"  [{arch} x {shape_name} x {mesh_tag}] FAILED: {rec['error']}")
+
+        if probe and not multi_pod and rec["status"] == "ok":
+            try:
+                rec["probe"] = depth_probe(cfg, shape, mesh, sparse=sparse,
+                                           quant=quant)
+            except Exception as e:  # noqa: BLE001
+                rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        fn = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
+        fn.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def depth_probe(cfg, shape, mesh, sparse: bool = False,
+                quant: bool = False) -> dict:
+    """Compile at two reduced unrolled depths; linear-fit per-layer HLO cost."""
+    L1, L2 = PROBE_DEPTHS[cfg.family]
+    probes = {}
+    for L in (L1, L2):
+        lowered = build_lowered(_reduce_depth(cfg, L), shape, mesh,
+                                unroll=True, sparse=sparse, quant=quant)
+        probes[L] = analyse(lowered)
+
+    def fit(get_val):
+        c1, c2 = get_val(probes[L1]), get_val(probes[L2])
+        b = (c2 - c1) / (L2 - L1)
+        a = c1 - b * L1
+        return a + b * cfg.n_layers
+
+    extrap = {
+        "flops": fit(lambda r: r["flops"]),
+        "bytes_accessed": fit(lambda r: r["bytes_accessed"]),
+        "collective_bytes": fit(lambda r: r["collective_bytes"].get("total", 0.0)),
+        "depths": [L1, L2],
+        "probe_full": probes,
+    }
+    return extrap
+
+
+def iter_cells():
+    for arch in ASSIGNED:
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--sparse", action="store_true",
+                    help="deploy compressed 8:16+outlier weights (serving cells)")
+    ap.add_argument("--quant", action="store_true",
+                    help="with --sparse: int8 N:M values (beyond-paper)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    t0 = time.time()
+    for arch, shape_name in cells:
+        for mp in meshes:
+            run_cell(arch, shape_name, mp, probe=not args.no_probe,
+                     out_dir=out, sparse=args.sparse, quant=args.quant)
+    print(f"done in {time.time()-t0:.0f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

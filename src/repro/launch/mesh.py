@@ -1,0 +1,28 @@
+"""Production meshes (assignment spec).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import to get 512 placeholder CPU devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke/bench runs (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (roofline):
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

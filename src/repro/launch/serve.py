@@ -1,0 +1,95 @@
+"""Serving driver: batched prefill + decode loop, dense or SPARSE weights.
+
+The sparse path is the paper's deployment story: linear weights are replaced
+by their 8:16 (+N:256 outlier) compressed form at load time
+(models/sparse_serving.py); on TPU the fused Pallas kernel streams compressed
+weights, on CPU the reference decompress path runs (same numerics).
+
+Example (CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama-paper-smoke \
+      --batch 4 --prompt-len 32 --gen 16 --sparse
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get, get_smoke
+from ..models import get_model
+from ..core import SparsifyConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-paper-smoke")
+    ap.add_argument("--smoke-arch", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sparse", action="store_true",
+                    help="deploy 8:16 + 16:256-outlier compressed weights")
+    ap.add_argument("--weight-pattern", default="8:16")
+    ap.add_argument("--outlier-pattern", default="16:256")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke_arch else get(args.arch)
+    zoo = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = zoo.init(key)
+
+    if args.sparse:
+        from ..models.sparse_serving import sparsify_for_serving
+        scfg = SparsifyConfig(weight_pattern=args.weight_pattern,
+                              outlier_pattern=args.outlier_pattern,
+                              scorer="magnitude", use_smoothquant=False)
+        params, report = sparsify_for_serving(params, scfg)
+        print(f"sparse deploy: {report['n_layers_sparsified']} matrices, "
+              f"bytes {report['dense_bytes']/2**20:.1f}MiB -> "
+              f"{report['compressed_bytes']/2**20:.1f}MiB "
+              f"({report['ratio']:.3f}x)")
+
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    pad = args.prompt_len + args.gen
+    batch = {"tokens": jnp.pad(prompt, ((0, 0), (0, 0)))}
+    if cfg.family in ("vlm", "encdec"):
+        batch["embeds"] = jax.random.normal(key, (args.batch, args.prompt_len,
+                                                  cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            pos = jnp.broadcast_to(jnp.arange(args.prompt_len)[None, None],
+                                   (3, args.batch, args.prompt_len))
+            batch["positions"] = pos
+            del batch["tokens"]
+
+    t0 = time.time()
+    logits, caches = zoo.prefill(params, batch)
+    # pad caches to prompt+gen when the family uses dense KV buffers
+    if isinstance(caches, dict) and "k" in caches:
+        grow = pad - caches["k"].shape[2]
+        widths = [(0, 0), (0, 0), (0, grow), (0, 0), (0, 0)]
+        caches = {**caches,
+                  "k": jnp.pad(caches["k"], widths),
+                  "v": jnp.pad(caches["v"], widths)}
+    prefill_s = time.time() - t0
+
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, caches = zoo.decode(params, caches, {"tokens": tok})
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    gen = jnp.concatenate(out_tokens, axis=1)
+    decode_s = time.time() - t0
+    print(f"prefill {args.batch}x{args.prompt_len} in {prefill_s:.2f}s; "
+          f"decoded {args.gen} tokens in {decode_s:.2f}s "
+          f"({args.batch*(args.gen-1)/max(decode_s,1e-9):.1f} tok/s)")
+    print("sample:", gen[0, :12].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Step functions the launcher / dry-run lower: train, prefill, decode.
+
+All are pure (params, state, batch) -> (outputs) functions built per config,
+jit-able with explicit in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import get_model
+from ..optim import AdamWConfig, adamw_init, adamw_step
+from ..optim import grad_compress as gc
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    microbatches: int = 1          # gradient accumulation steps
+    grad_compression: bool = False # int8 + error feedback between microbatches
+    unroll: bool = False           # Python-unrolled layer loop (dry-run)
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, opts: TrainOptions = TrainOptions()):
+    zoo = get_model(cfg)
+
+    def loss_of(params, batch):
+        loss, aux = zoo.loss(params, batch, unroll=opts.unroll)
+        return loss
+
+    def train_step(params, opt_state, batch):
+        if opts.microbatches > 1:
+            # the batch axis is axis 0 except for M-RoPE positions [3, B, S]
+            bdim = max(x.shape[0] for x in jax.tree.leaves(batch)
+                       if x.shape[0] != 3) if jax.tree.leaves(batch) else 0
+
+            def split(x):
+                mb = opts.microbatches
+                ax = 0 if x.shape[0] == bdim else 1
+                pre = x.shape[:ax]
+                return jnp.moveaxis(
+                    x.reshape(*pre, mb, x.shape[ax] // mb, *x.shape[ax + 1:]),
+                    ax, 0)
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_batch):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb_batch)
+                if opts.grad_compression:
+                    q, _ = gc.compress_with_feedback(g, jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), g))
+                    g = gc.decompress(q, g)
+                gsum = jax.tree.map(jnp.add, gsum, jax.tree.map(
+                    lambda x: x.astype(jnp.float32), g))
+                return (gsum, lsum + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / opts.microbatches, gsum)
+            loss = lsum / opts.microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        new_params, new_opt, metrics = adamw_step(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg, unroll: bool = False):
+    zoo = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return zoo.prefill(params, batch, unroll=unroll)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, unroll: bool = False):
+    zoo = get_model(cfg)
+
+    def decode_step(params, caches, batch):
+        return zoo.decode(params, caches, batch, unroll=unroll)
+
+    return decode_step

@@ -1,0 +1,177 @@
+"""Shared neural building blocks (pure JAX, parameter dicts).
+
+Conventions:
+  - Linear weights are stored ``[out, in]`` (paper convention W[C_out, C_in]);
+    apply is ``y = einsum('...k,ok->...o', x, w)``.
+  - All blocks are bias-free with RMSNorm unless noted (llama lineage).
+  - Functions take a params dict and are vmap/scan/jit friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def linear(w, x: jax.Array) -> jax.Array:
+    """y = x @ W^T.  Dispatches on compressed SparseWeight containers
+    (models/sparse_serving.py) so the whole zoo serves sparse unchanged."""
+    if hasattr(w, "nm_values"):
+        from .sparse_serving import sparse_apply
+        return sparse_apply(w, x)
+    return jnp.einsum("...k,ok->...o", x, w)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "sq_relu":          # nemotron-4: squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name}")
+
+
+# --------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               mrope_sections: tuple[int, ...] | None = None) -> jax.Array:
+    """Rotate ``x [..., S, H, hd]`` by position.
+
+    ``positions``: [..., S] for standard RoPE, or [3, ..., S] (t/h/w) with
+    ``mrope_sections`` = per-section pair counts summing to hd//2 (Qwen2-VL
+    M-RoPE: each frequency pair is driven by one of the three position ids).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                               # [hd/2]
+    if mrope_sections is None:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # [...,S,hd/2]
+    else:
+        assert positions.shape[0] == 3 and sum(mrope_sections) == hd // 2
+        parts = []
+        start = 0
+        for sec_i, sec in enumerate(mrope_sections):
+            f = freqs[start:start + sec]
+            parts.append(positions[sec_i][..., None].astype(jnp.float32) * f)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)                # [...,S,hd/2]
+    cos = jnp.cos(angles)[..., None, :]                          # [...,S,1,hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA), full + chunked(flash-style) + decode
+# --------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, H: int) -> jax.Array:
+    """[B,S,KV,hd] -> [B,S,H,hd] by repeating each KV head H//KV times.
+
+    Keeping attention in an H-major layout lets the `model` axis sharding of
+    the q heads propagate through scores/probs (the grouped [KV, g] layout
+    silently replicates multi-GiB score tensors under GSPMD)."""
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def _sdpa_full(q, k, v, causal: bool, window: int | None,
+               q_offset: int = 0) -> jax.Array:
+    """q [B,Sq,H,hd], k/v [B,Sk,KV,hd]; repeats KV groups; returns [B,Sq,H,hd]."""
+    from ..parallel import policy as pol
+    B, Sq, H, hd = q.shape
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    k = pol.shard(k, ("fsdp", None, "model", None))
+    v = pol.shard(v, ("fsdp", None, "model", None))
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf, k.astype(jnp.float32))
+    scores = pol.shard(scores, ("fsdp", "model", None, None))
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def sdpa(q, k, v, *, causal: bool = True, window: int | None = None,
+         q_chunks: int = 1, q_offset: int = 0) -> jax.Array:
+    """Scaled dot-product attention with optional query chunking.
+
+    ``q_chunks > 1`` processes queries in chunks (memory O(Sq/q_chunks * Sk)
+    per step) via lax.scan — the pure-JAX flash-attention analogue used for
+    long-context prefill.  Chunking only changes memory, not math (keys are
+    not chunked; no online softmax needed).
+    """
+    if q_chunks <= 1 or q.shape[1] % q_chunks:
+        return _sdpa_full(q, k, v, causal, window, q_offset)
+    B, Sq, H, hd = q.shape
+    cs = Sq // q_chunks
+    qc = q.reshape(B, q_chunks, cs, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, args):
+        i, qi = args
+        o = _sdpa_full(qi, k, v, causal, window, q_offset + i * cs)
+        return carry, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(q_chunks), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
+    """Single-token attention: q [B,1,H,hd] over caches [B,S,KV,hd].
+
+    ``cache_len`` masks positions >= len (static S buffers, dynamic fill)."""
+    from ..parallel import policy as pol
+    B, _, H, hd = q.shape
+    k = _repeat_kv(k_cache, H)
+    v = _repeat_kv(v_cache, H)
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, H, hd)
+    scores = jnp.einsum("bhd,bshd->bhs", qf, k.astype(jnp.float32))
+    scores = pol.shard(scores, ("fsdp", "model", None))
+    valid = jnp.arange(k_cache.shape[1])[None] < cache_len[:, None]  # [B,S]
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Parameter init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, out_dim: int, in_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (out_dim, in_dim), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

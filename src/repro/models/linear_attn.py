@@ -1,0 +1,124 @@
+"""Chunkwise scalar-decay linear attention — shared engine for mLSTM (xLSTM)
+and Mamba2 (SSD).  Both are gated outer-product recurrences
+
+    C_t = f_t * C_{t-1} + i_t * k_t v_t^T          (C: [dk, dv] per head)
+    y_t = q_t^T C_t   (/ normalizer for mLSTM)
+
+computed in chunk-parallel form: within a chunk all timesteps are evaluated
+with dense matmuls (MXU-friendly), the state is carried across chunks with a
+lax.scan.  Gates are scalar per (step, head) with log_f <= 0 (sigmoid/SSD
+decay), so intra-chunk factors exp(F_t - F_s) are always <= 1 — numerically
+safe without running-max tricks.  (xLSTM's exponential input gating is
+replaced by sigmoid gating; shapes/FLOPs identical — DESIGN.md §5.)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(q, k, v, log_f, log_i=None, *, chunk: int = 64,
+                normalizer: bool = False, initial_state=None):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_f/log_i: [B,S,H] (<= 0).
+
+    Returns (y [B,S,H,dv], final_state) where final_state = (C [B,H,dk,dv],
+    n [B,H,dk] or None).
+    """
+    from ..parallel import policy as pol
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    # Layout: shard heads over `model` when they divide (zamba2: H=80);
+    # otherwise shard the state's dv dim (xlstm: H=4, dh=512 — the [dk,dv]
+    # matrix state is the memory hog, and every einsum below keeps a
+    # dv-sharded layout local, no extra collectives).
+    if pol.divides("model", H):
+        ax_qk = ("fsdp", None, "model", None)
+        ax_v = ("fsdp", None, "model", None)
+        ax_state = ("fsdp", "model", None, None)
+    else:
+        ax_qk = ("fsdp", None, None, None)
+        ax_v = ("fsdp", None, None, "model")
+        ax_state = ("fsdp", None, None, "model")
+    q = pol.shard(q, ax_qk)
+    k = pol.shard(k, ax_qk)
+    v = pol.shard(v, ax_v)
+
+    def to_chunks(x):
+        return x.reshape(B, nc, c, *x.shape[2:]).swapaxes(0, 1)  # [nc,B,c,...]
+
+    qc, kc, vc = map(to_chunks, (q, k, v))
+    fc = to_chunks(log_f.astype(jnp.float32))
+    ic = to_chunks((log_i if log_i is not None else jnp.zeros_like(log_f))
+                   .astype(jnp.float32))
+
+    if initial_state is None:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+    else:
+        C0, n0 = initial_state
+        if n0 is None:
+            n0 = jnp.zeros((B, H, dk), jnp.float32)
+    C0 = pol.shard(C0, ax_state)
+
+    def body(carry, xs):
+        C, n = carry
+        C = pol.shard(C, ax_state)                   # keep the carry sharded
+        qi, ki, vi, fi, ii = xs                      # [B,c,H,*]
+        F = jnp.cumsum(fi, axis=1)                   # [B,c,H] inclusive
+        Ftot = F[:, -1]                              # [B,H]
+        qf = qi.astype(jnp.float32)
+        kf = ki.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+
+        # inter-chunk: y_t += exp(F_t) q_t^T C_prev
+        y_inter = jnp.einsum("bthk,bhkv->bthv", qf * jnp.exp(F)[..., None], C)
+
+        # intra-chunk: A[t,s] = exp(F_t - F_s + i_s) for s<=t
+        gap = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        A = jnp.where(tri[None, :, :, None], jnp.exp(gap), 0.0)   # [B,t,s,H]
+        scores = jnp.einsum("bthk,bshk->btsh", qf, kf) * A
+        y = y_inter + jnp.einsum("btsh,bshv->bthv", scores, vf)
+
+        # decayed keys for state/normalizer updates
+        kdec = kf * jnp.exp(Ftot[:, None] - F + ii)[..., None]     # [B,c,H,dk]
+        C_new = C * jnp.exp(Ftot)[..., None, None] \
+            + jnp.einsum("bthk,bthv->bhkv", kdec, vf)
+
+        if normalizer:
+            n_t = jnp.einsum("bshk,btsh->bthk", kf,
+                             jnp.exp(gap) * tri[None, :, :, None].astype(jnp.float32)) \
+                + n[:, None] * jnp.exp(F)[..., None]
+            denom = jnp.abs(jnp.einsum("bthk,bthk->bth", qf, n_t))
+            y = y / jnp.maximum(denom, 1.0)[..., None]
+            n_new = n * jnp.exp(Ftot)[..., None] + kdec.sum(axis=1)
+        else:
+            n_new = n
+        return (C_new, n_new), y
+
+    (Cf, nf), ys = jax.lax.scan(body, (C0, n0), (qc, kc, vc, fc, ic))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, dv).astype(v.dtype)
+    return y, (Cf, nf if normalizer else None)
+
+
+def gla_decode_step(q, k, v, log_f, log_i, state, normalizer: bool = False):
+    """Single-token recurrence. q,k: [B,H,dk]; v: [B,H,dv]; gates [B,H]."""
+    C, n = state
+    f = jnp.exp(log_f.astype(jnp.float32))[..., None, None]
+    i = jnp.exp((log_i if log_i is not None else jnp.zeros_like(log_f))
+                .astype(jnp.float32))[..., None, None]
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    C_new = f * C + i * kv
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), C_new)
+    if normalizer:
+        n_new = f[..., 0] * n + i[..., 0] * k.astype(jnp.float32)
+        denom = jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n_new))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    else:
+        n_new = n
+    return y.astype(v.dtype), (C_new, n_new)

@@ -1,0 +1,154 @@
+"""Uniform model API over all families.
+
+  zoo = get_model(cfg)
+  params = zoo.init(key)
+  loss, aux = zoo.loss(params, batch)
+  logits, caches = zoo.prefill(params, batch)
+  logits, caches = zoo.decode(params, caches, batch)
+
+``input_specs(cfg, shape, dtype)`` builds jax.ShapeDtypeStruct stand-ins for
+every input of the corresponding step — the dry-run contract (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from . import whisper as whi
+from . import xlstm as xls
+from . import zamba as zam
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelZoo:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable | None = None
+
+
+def get_model(cfg) -> ModelZoo:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelZoo(
+            cfg=cfg,
+            init=lambda key: tfm.init_params(key, cfg),
+            loss=lambda p, b, unroll=False: tfm.loss_fn(p, b, cfg, unroll),
+            prefill=lambda p, b, unroll=False: tfm.prefill(p, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: tfm.decode_step(p, c, b, cfg, unroll),
+            init_cache=lambda bs, ml: tfm.init_cache(cfg, bs, ml),
+        )
+    if fam == "ssm":
+        return ModelZoo(
+            cfg=cfg,
+            init=lambda key: xls.init_params(key, cfg),
+            loss=lambda p, b, unroll=False: xls.loss_fn(p, b, cfg, unroll),
+            prefill=lambda p, b, unroll=False: xls.prefill(p, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: xls.decode_step(p, c, b, cfg, unroll),
+            init_cache=lambda bs, ml: {"states": xls.init_state(cfg, bs),
+                                       "pos": jnp.zeros((), jnp.int32)},
+        )
+    if fam == "hybrid":
+        return ModelZoo(
+            cfg=cfg,
+            init=lambda key: zam.init_params(key, cfg),
+            loss=lambda p, b, unroll=False: zam.loss_fn(p, b, cfg, unroll),
+            prefill=lambda p, b, unroll=False: zam.prefill(p, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: zam.decode_step(p, c, b, cfg, unroll),
+            init_cache=lambda bs, ml: zam.init_cache(cfg, bs, ml),
+        )
+    if fam == "encdec":
+        return ModelZoo(
+            cfg=cfg,
+            init=lambda key: whi.init_params(key, cfg),
+            loss=lambda p, b, unroll=False: whi.loss_fn(p, b, cfg, unroll),
+            prefill=lambda p, b, unroll=False: whi.prefill(p, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: whi.decode_step(p, c, b, cfg, unroll),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg, shape, *, for_decode_cache: bool = False) -> dict:
+    """Inputs for the step implied by ``shape.kind``.
+
+    train:   {"tokens"/"embeds", "labels", ...}
+    prefill: prompt batch
+    decode:  {"tokens": [B,1]} + cache specs (built by cache_specs()).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if cfg.family == "vlm":
+        base = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype),
+                "positions": tok((3, B, S))}
+    elif cfg.family == "encdec":
+        base = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype),
+                "tokens": tok((B, S))}
+    else:
+        base = {"tokens": tok((B, S))}
+
+    if shape.kind == "train":
+        return {**base, "labels": tok((B, S))}
+    if shape.kind == "prefill":
+        return base
+    # decode: one new token against a cache of length S
+    return {"tokens": tok((B, 1))}
+
+
+def cache_specs(cfg, shape) -> dict:
+    """ShapeDtypeStruct pytree matching the model's decode cache."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "moe", "vlm"):
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        return {"k": sds((L, B, S, KV, hd), dt), "v": sds((L, B, S, KV, hd), dt),
+                "pos": sds((), i32)}
+    if cfg.family == "ssm":
+        di = 2 * cfg.d_model
+        H = cfg.n_heads
+        dh = di // H
+        states = []
+        for i in range(cfg.n_layers):
+            if cfg.slstm_every and (i % cfg.slstm_every) == (cfg.slstm_every - 1):
+                states.append((sds((B, H, dh), f32),) * 3
+                              + (sds((B, H, dh), f32),))
+            else:
+                states.append((sds((B, H, dh, dh), f32), sds((B, H, dh), f32)))
+        return {"states": states, "pos": sds((), i32)}
+    if cfg.family == "hybrid":
+        di = 2 * cfg.d_model
+        H = di // cfg.ssm_head_dim
+        states = [(sds((B, H, cfg.ssm_state, cfg.ssm_head_dim), f32), None)
+                  for _ in range(cfg.n_layers)]
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        kvs = [(sds((B, S, cfg.n_kv_heads, cfg.hd), dt),
+                sds((B, S, cfg.n_kv_heads, cfg.hd), dt)) for _ in range(n_attn)]
+        return {"states": states, "kv": kvs, "pos": sds((), i32)}
+    if cfg.family == "encdec":
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        return {"k": sds((L, B, S, KV, hd), dt), "v": sds((L, B, S, KV, hd), dt),
+                "ck": sds((L, B, S, KV, hd), dt), "cv": sds((L, B, S, KV, hd), dt),
+                "pos": sds((), i32)}
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg) -> Any:
+    """ShapeDtypeStruct pytree of the model params (eval_shape, no alloc)."""
+    zoo = get_model(cfg)
+    return jax.eval_shape(lambda: zoo.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,300 @@
+"""Decoder-only transformer (dense / MoE / VLM backbone).
+
+Covers: gemma-7b (GeGLU, head_dim 256), qwen3-8b (qk_norm), internlm2-1.8b,
+nemotron-4-340b (squared-ReLU, non-gated), qwen2-vl-72b (M-RoPE, embed-input),
+mixtral-8x7b (MoE + SWA), llama4-maverick (MoE top-1 + shared expert), and the
+paper's llama2/3 + mistral models.
+
+Layer weights are stacked [L, ...]; the forward pass runs either
+``lax.scan`` over layers (training: fast compile, remat-able) or an unrolled
+Python loop (``unroll=True``, used by the dry-run so XLA cost analysis counts
+every layer — see DESIGN.md §6).
+
+Three entry points per the launch contract:
+  loss_fn(params, batch, cfg)                          — training
+  prefill(params, batch, cfg) -> (logits, caches)      — inference prefill
+  decode_step(params, caches, batch, cfg) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (activation, apply_rope, decode_attention, dense_init,
+                     linear, rms_norm, sdpa, split_keys)
+from . import moe as moe_lib
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg, scale_layers: bool = True):
+    d, hd, H, KV, L = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    dtype = cfg.dtype
+    ks = split_keys(key, 12)
+
+    def stack(initf, *shape_key):
+        outs = [initf(k) for k in split_keys(shape_key[0], L)]
+        return jnp.stack(outs)
+
+    layers = {
+        "attn_norm": jnp.zeros((L, d), dtype),
+        "wq": stack(lambda k: dense_init(k, H * hd, d, dtype), ks[0]),
+        "wk": stack(lambda k: dense_init(k, KV * hd, d, dtype), ks[1]),
+        "wv": stack(lambda k: dense_init(k, KV * hd, d, dtype), ks[2]),
+        "wo": stack(lambda k: dense_init(k, d, H * hd, dtype), ks[3]),
+        "mlp_norm": jnp.zeros((L, d), dtype),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.zeros((L, hd), dtype)
+        layers["k_norm"] = jnp.zeros((L, hd), dtype)
+    if cfg.moe is not None:
+        sub = [moe_lib.init_moe(k, cfg, dtype) for k in split_keys(ks[4], L)]
+        layers["moe"] = jax.tree.map(lambda *xs: jnp.stack(xs), *sub)
+    else:
+        if cfg.glu:
+            layers["w_gate"] = stack(lambda k: dense_init(k, cfg.d_ff, d, dtype), ks[5])
+        layers["w_up"] = stack(lambda k: dense_init(k, cfg.d_ff, d, dtype), ks[6])
+        layers["w_down"] = stack(lambda k: dense_init(k, d, cfg.d_ff, dtype), ks[7])
+
+    params = {
+        "embed": (jax.random.normal(ks[8], (cfg.vocab, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[9], cfg.vocab, d, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# one block
+# --------------------------------------------------------------------------
+
+def _project_qkv(lp, x, cfg, positions):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = linear(lp["wq"], x).reshape(B, S, H, hd)
+    k = linear(lp["wk"], x).reshape(B, S, KV, hd)
+    v = linear(lp["wv"], x).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _mlp(lp, x, cfg):
+    from ..parallel import policy as pol
+    if cfg.moe is not None:
+        return moe_lib.moe_apply(lp["moe"], x, cfg)
+    if cfg.glu:
+        hidden = activation(cfg.act, linear(lp["w_gate"], x)) * linear(lp["w_up"], x)
+    else:
+        hidden = activation(cfg.act, linear(lp["w_up"], x))
+    hidden = pol.shard(hidden, ("fsdp", None, "model"))
+    return linear(lp["w_down"], hidden)
+
+
+def block_forward(lp, x, positions, cfg, q_chunks: int = 1, causal: bool = True):
+    """Full-sequence block (train / prefill). Returns (y, (k, v)).
+
+    Activation constraints pin the batch (fsdp) sharding at block boundaries —
+    without them GSPMD can flip to a d_model-sharded/batch-replicated layout
+    whose temps are mesh-times larger (see DESIGN.md §Perf log)."""
+    from ..parallel import policy as pol
+    x = pol.shard(x, ("fsdp", None, None))
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(lp, h, cfg, positions)
+    q = pol.shard(q, ("fsdp", None, "model", None))
+    attn = sdpa(q, k, v, causal=causal, window=cfg.window, q_chunks=q_chunks)
+    x = x + linear(lp["wo"], attn.reshape(*attn.shape[:2], -1))
+    x = pol.shard(x, ("fsdp", None, None))
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + _mlp(lp, h, cfg)
+    return x, (k, v)
+
+
+def block_decode(lp, x, k_cache, v_cache, pos, cfg):
+    """One-token block. x: [B,1,d]; caches [B,Smax,KV,hd]; pos: scalar int."""
+    from ..parallel import policy as pol
+    B = x.shape[0]
+    x = pol.shard(x, ("fsdp", None, None))
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos, (3, B, 1))
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1))
+    q, k, v = _project_qkv(lp, h, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, 1)
+    cache_len = jnp.full((B,), pos + 1, jnp.int32)
+    if cfg.window is not None:
+        # sliding window: mask everything older than `window`
+        lo = jnp.maximum(pos + 1 - cfg.window, 0)
+        valid_from = jnp.full((B,), lo, jnp.int32)
+        attn = _windowed_decode(q, k_cache, v_cache, cache_len, valid_from)
+    else:
+        attn = decode_attention(q, k_cache, v_cache, cache_len)
+    x = x + linear(lp["wo"], attn.reshape(B, 1, -1))
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + _mlp(lp, h, cfg)
+    return x, k_cache, v_cache
+
+
+def _windowed_decode(q, k_cache, v_cache, cache_len, valid_from):
+    import math as _m
+    from ..parallel import policy as pol
+    from .layers import _repeat_kv
+    B, _, H, hd = q.shape
+    k = _repeat_kv(k_cache, H)
+    v = _repeat_kv(v_cache, H)
+    qf = (q.astype(jnp.float32) / _m.sqrt(hd)).reshape(B, H, hd)
+    scores = jnp.einsum("bhd,bshd->bhs", qf, k.astype(jnp.float32))
+    scores = pol.shard(scores, ("fsdp", "model", None))
+    ar = jnp.arange(k_cache.shape[1])[None]
+    valid = (ar < cache_len[:, None]) & (ar >= valid_from[:, None])
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# full forward
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg):
+    """Returns (x [B,S,d], positions)."""
+    if "embeds" in batch:                      # vlm / audio stub frontend
+        x = batch["embeds"].astype(cfg.dtype)
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        positions = jnp.broadcast_to(positions[None], (3, B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, positions
+
+
+def _auto_q_chunks(S: int) -> int:
+    return max(1, S // 4096) if S > 8192 else 1
+
+
+def forward(params, batch, cfg, unroll: bool = False, collect_kv: bool = False):
+    """Full-sequence forward. Returns (logits, caches|None)."""
+    from ..parallel import policy as pol
+    x, positions = _embed_inputs(params, batch, cfg)
+    x = pol.shard(x, ("fsdp", None, None))
+    q_chunks = _auto_q_chunks(x.shape[1])
+
+    blk = partial(block_forward, positions=positions, cfg=cfg, q_chunks=q_chunks)
+    if unroll:
+        ublk = jax.checkpoint(blk) if (cfg.remat and not collect_kv) else blk
+        kvs = []
+        L = cfg.n_layers
+        for i in range(L):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, kv = ublk(lp, x)
+            if collect_kv:
+                kvs.append(kv)
+        caches = _stack_kv(kvs) if collect_kv else None
+    else:
+        def body(h, lp):
+            h, kv = blk(lp, h)
+            return h, kv if collect_kv else None
+        fn = jax.checkpoint(body) if (cfg.remat and not collect_kv) else body
+        x, kvs = jax.lax.scan(fn, x, params["layers"])
+        caches = (kvs[0], kvs[1]) if collect_kv else None
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = pol.shard(linear(head, x), ("fsdp", None, "model"))
+    return logits, caches
+
+
+def _stack_kv(kvs):
+    k = jnp.stack([kv[0] for kv in kvs])
+    v = jnp.stack([kv[1] for kv in kvs])
+    return (k, v)
+
+
+# --------------------------------------------------------------------------
+# launch contract
+# --------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg, unroll: bool = False):
+    logits, _ = forward(params, batch, cfg, unroll=unroll)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    aux = {}
+    if cfg.moe is not None:
+        # load-balance aux on the input embeddings of each layer is costly to
+        # recover post-hoc; use first-layer input as proxy signal.
+        x, _ = _embed_inputs(params, batch, cfg)
+        lp0 = jax.tree.map(lambda p: p[0], params["layers"])
+        aux["lb_loss"] = moe_lib.aux_load_balance_loss(lp0["moe"], x, cfg)
+        loss = loss + 0.01 * aux["lb_loss"]
+    return loss, aux
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    shape = (L, batch_size, max_len, KV, hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg, unroll: bool = False):
+    """Run the full prompt; return (last-token logits, filled caches)."""
+    logits, (k, v) = forward(params, batch, cfg, unroll=unroll, collect_kv=True)
+    S = k.shape[2]
+    caches = {"k": k, "v": v, "pos": jnp.array(S, jnp.int32)}
+    return logits[:, -1], caches
+
+
+def decode_step(params, caches, batch, cfg, unroll: bool = False):
+    """One new token for every sequence. batch: {"tokens": [B, 1]}.
+
+    caches: {"k"/"v": [L, B, Smax, KV, hd], "pos": scalar filled length}.
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)        # [B,1,d]
+    pos = caches["pos"]
+
+    if unroll:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, kc, vc = block_decode(lp, x, caches["k"][i], caches["v"][i], pos, cfg)
+            ks.append(kc); vs.append(vc)
+        new_k, new_v = jnp.stack(ks), jnp.stack(vs)
+    else:
+        def body(h, xs):
+            lp, kc, vc = xs
+            h, kc, vc = block_decode(lp, h, kc, vc, pos, cfg)
+            return h, (kc, vc)
+        x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], caches["k"], caches["v"]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = linear(head, x)[:, 0]                        # [B, V]
+    return logits, {"k": new_k, "v": new_v, "pos": pos + 1}

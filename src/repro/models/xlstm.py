@@ -1,0 +1,253 @@
+"""xLSTM (Beck et al., 2024 — arXiv:2405.04517): mLSTM + sLSTM blocks.
+
+xlstm-350m: 24 layers, d_model=1024, 4 heads; mostly mLSTM with sLSTM blocks
+interleaved every ``cfg.slstm_every`` layers (xLSTM[a:b] style).
+
+mLSTM block (pre-LN, projection factor 2):
+  x -> up-proj to 2*di, split (cell input, output gate branch)
+  q,k,v projections at di; scalar i/f gates per head from the cell input
+  chunkwise matrix-memory recurrence (linear_attn.chunked_gla, normalizer on)
+  y = cell_out * silu(gate branch); down-proj back to d; residual.
+
+sLSTM block: scalar-memory recurrence with per-head recurrent mixing,
+strictly sequential (lax.scan over time) — kept faithful since sLSTM's
+non-diagonalizable recurrence has no parallel form (xLSTM paper §2.3).
+
+State layout for serving: per layer dict (kind-dependent):
+  mLSTM: C [B,H,dk,dv], n [B,H,dk]
+  sLSTM: c,n,h [B,di]
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, linear, rms_norm, split_keys
+from .linear_attn import chunked_gla, gla_decode_step
+
+
+def _di(cfg):
+    return 2 * cfg.d_model
+
+
+def init_params(key, cfg):
+    d, L = cfg.d_model, cfg.n_layers
+    di = _di(cfg)
+    H = cfg.n_heads
+    dh = di // H
+    dtype = cfg.dtype
+    ks = split_keys(key, 10)
+
+    def stack(initf, key):
+        return jnp.stack([initf(k) for k in split_keys(key, L)])
+
+    layers = {
+        "norm": jnp.zeros((L, d), dtype),
+        "w_up": stack(lambda k: dense_init(k, 2 * di, d, dtype), ks[0]),
+        "w_q": stack(lambda k: dense_init(k, di, di, dtype), ks[1]),
+        "w_k": stack(lambda k: dense_init(k, di, di, dtype), ks[2]),
+        "w_v": stack(lambda k: dense_init(k, di, di, dtype), ks[3]),
+        "w_gates": stack(lambda k: dense_init(k, 2 * H, di, dtype), ks[4]),
+        "w_down": stack(lambda k: dense_init(k, d, di, dtype), ks[5]),
+        # sLSTM recurrent weights (used only at sLSTM layers; per-head block
+        # diagonal approximated by per-head dense R over dh):
+        "r_gates": stack(lambda k: (jax.random.normal(k, (4, H, dh, dh), jnp.float32)
+                                    / jnp.sqrt(dh)).astype(dtype), ks[6]),
+        "w_slstm": stack(lambda k: dense_init(k, 4 * di, di, dtype), ks[7]),
+    }
+    params = {
+        "embed": (jax.random.normal(ks[8], (cfg.vocab, d), jnp.float32) * 0.02
+                  ).astype(dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), dtype),
+        "lm_head": dense_init(ks[9], cfg.vocab, d, dtype),
+    }
+    return params
+
+
+def _is_slstm(cfg, i: int) -> bool:
+    k = cfg.slstm_every
+    return k > 0 and (i % k) == (k - 1)
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+def _mlstm_qkvgates(lp, xc, cfg):
+    di = xc.shape[-1]
+    H = cfg.n_heads
+    dh = di // H
+    B, S = xc.shape[:2]
+    q = linear(lp["w_q"], xc).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(xc.dtype)
+    k = linear(lp["w_k"], xc).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(xc.dtype)
+    v = linear(lp["w_v"], xc).reshape(B, S, H, dh)
+    gates = linear(lp["w_gates"], xc).astype(jnp.float32)        # [B,S,2H]
+    log_i = jax.nn.log_sigmoid(gates[..., :H])
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+    return q, k, v, log_f, log_i
+
+
+def mlstm_block(lp, x, cfg, state=None, chunk: int = 64):
+    """Full-sequence mLSTM block. Returns (y, new_state)."""
+    from ..parallel import policy as pol
+    B, S, d = x.shape
+    # xlstm-350m is small (4 heads): DP-only activation layout — every [B,...]
+    # tensor is pinned to the fsdp axis so nothing replicates across `model`.
+    x = pol.shard(x, ("fsdp", None, None))
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    up = pol.shard(linear(lp["w_up"], h), ("fsdp", None, None))
+    xc, xg = jnp.split(up, 2, axis=-1)                           # [B,S,di] each
+    q, k, v, log_f, log_i = _mlstm_qkvgates(lp, xc, cfg)
+    y, new_state = chunked_gla(q, k, v, log_f, log_i, chunk=chunk,
+                               normalizer=True, initial_state=state)
+    y = y.reshape(B, S, -1) * jax.nn.silu(xg)
+    return x + linear(lp["w_down"], y), new_state
+
+
+def mlstm_decode(lp, x, cfg, state):
+    """x: [B,1,d]."""
+    from ..parallel import policy as pol
+    B = x.shape[0]
+    x = pol.shard(x, ("fsdp", None, None))
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    up = linear(lp["w_up"], h)
+    xc, xg = jnp.split(up, 2, axis=-1)
+    q, k, v, log_f, log_i = _mlstm_qkvgates(lp, xc, cfg)
+    y, new_state = gla_decode_step(q[:, 0], k[:, 0], v[:, 0], log_f[:, 0],
+                                   log_i[:, 0], state, normalizer=True)
+    y = y.reshape(B, 1, -1) * jax.nn.silu(xg)
+    return x + linear(lp["w_down"], y), new_state
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+def _slstm_step(lp, cfg, carry, zifo_t):
+    """carry: (c, n, h, m) each [B,H,dh]; zifo_t: [B,4,H,dh] pre-activations."""
+    c, n, h, m = carry
+    H = cfg.n_heads
+    rec = jnp.einsum("bhd,ghde->bghe", h, lp["r_gates"].astype(jnp.float32))
+    z_t, i_t, f_t, o_t = [zifo_t[:, g].astype(jnp.float32) + rec[:, g]
+                          for g in range(4)]
+    # stabilized exponential gating (xLSTM eq. 15-17)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_t)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(lp, x, cfg, state=None):
+    from ..parallel import policy as pol
+    B, S, d = x.shape
+    di = _di(cfg)
+    H = cfg.n_heads
+    dh = di // H
+    x = pol.shard(x, ("fsdp", None, None))
+    h_in = rms_norm(x, lp["norm"], cfg.norm_eps)
+    up = pol.shard(linear(lp["w_up"], h_in), ("fsdp", None, None))
+    xc, xg = jnp.split(up, 2, axis=-1)
+    zifo = linear(lp["w_slstm"], xc).reshape(B, S, 4, H, dh)
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = (z, z, z, jnp.full((B, H, dh), -1e30, jnp.float32))
+    carry, hs = jax.lax.scan(partial(_slstm_step, lp, cfg), state,
+                             zifo.swapaxes(0, 1))                 # scan over S
+    y = hs.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype) * jax.nn.silu(xg)
+    return x + linear(lp["w_down"], y), carry
+
+
+def slstm_decode(lp, x, cfg, state):
+    B = x.shape[0]
+    di = _di(cfg)
+    H = cfg.n_heads
+    dh = di // H
+    h_in = rms_norm(x, lp["norm"], cfg.norm_eps)
+    up = linear(lp["w_up"], h_in)
+    xc, xg = jnp.split(up, 2, axis=-1)
+    zifo = linear(lp["w_slstm"], xc).reshape(B, 4, H, dh)
+    state, h_new = _slstm_step(lp, cfg, state, zifo)
+    y = h_new.reshape(B, 1, di).astype(x.dtype) * jax.nn.silu(xg)
+    return x + linear(lp["w_down"], y), state
+
+
+# ------------------------------------------------------------ full model ---
+
+def _layer_params(params, i):
+    return jax.tree.map(lambda p: p[i], params["layers"])
+
+
+def forward(params, batch, cfg, unroll: bool = False, states=None,
+            return_states: bool = False):
+    """xLSTM blocks are heterogeneous (mLSTM/sLSTM) so the layer loop is
+    always a Python loop; time-recurrence inside each block uses lax.scan."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    new_states = []
+    # remat each block: backward keeps only [B,S,d] inputs per layer
+    s_fn = partial(slstm_block, cfg=cfg)
+    m_fn = partial(mlstm_block, cfg=cfg)
+    if cfg.remat:
+        s_fn, m_fn = jax.checkpoint(s_fn), jax.checkpoint(m_fn)
+    for i in range(cfg.n_layers):
+        lp = _layer_params(params, i)
+        st = states[i] if states is not None else None
+        if _is_slstm(cfg, i):
+            x, s = s_fn(lp, x, state=st)
+        else:
+            x, s = m_fn(lp, x, state=st)
+        new_states.append(s)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = linear(params["lm_head"], x)
+    return (logits, new_states) if return_states else (logits, None)
+
+
+def loss_fn(params, batch, cfg, unroll: bool = False):
+    logits, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0), {}
+
+
+def init_state(cfg, batch_size: int):
+    di = _di(cfg)
+    H = cfg.n_heads
+    dh = di // H
+    states = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            z = jnp.zeros((batch_size, H, dh), jnp.float32)
+            states.append((z, z, z, jnp.full((batch_size, H, dh), -1e30, jnp.float32)))
+        else:
+            states.append((jnp.zeros((batch_size, H, dh, dh), jnp.float32),
+                           jnp.zeros((batch_size, H, dh), jnp.float32)))
+    return states
+
+
+def prefill(params, batch, cfg, unroll: bool = False):
+    logits, states = forward(params, batch, cfg, states=None, return_states=True)
+    return logits[:, -1], {"states": states,
+                           "pos": jnp.array(batch["tokens"].shape[1], jnp.int32)}
+
+
+def decode_step(params, caches, batch, cfg, unroll: bool = False):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    states = caches["states"]
+    new_states = []
+    for i in range(cfg.n_layers):
+        lp = _layer_params(params, i)
+        if _is_slstm(cfg, i):
+            x, s = slstm_decode(lp, x, cfg, states[i])
+        else:
+            x, s = mlstm_decode(lp, x, cfg, states[i])
+        new_states.append(s)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = linear(params["lm_head"], x)[:, 0]
+    return logits, {"states": new_states, "pos": caches["pos"] + 1}

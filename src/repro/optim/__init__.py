@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, init as adamw_init, step as adamw_step, global_norm
+from .schedule import cosine_with_warmup, constant
+from . import grad_compress

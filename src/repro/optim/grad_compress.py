@@ -1,0 +1,61 @@
+"""Int8 gradient compression with error feedback — the DP all-reduce trick.
+
+At 1000+ nodes the data-parallel gradient all-reduce dominates the step for
+small per-chip batches.  Compressing gradients to int8 (per-leaf absmax
+scaling) cuts DP collective bytes 4x (f32) / 2x (bf16); the quantization
+residual is carried to the next step (error feedback, Seide et al. 2014) so
+convergence is preserved.
+
+Usage inside train_step (launch/train.py):
+    g_q, new_err = compress_with_feedback(grads, err)
+    g_sync = jax.lax.pmean(decompress(g_q), "data")   # or implicit via psum
+
+Under jit+GSPMD the all-reduce is inserted by XLA; quantizing before the
+mean is expressed by wrapping the gradient pytree — XLA reduces the int8
+payloads' decompressed values but the *communicated* tensor is the int8 one
+when the compression boundary is placed at the collective (shard_map path).
+The jit path compresses/decompresses around gradient accumulation, which
+still halves the HBM-resident gradient bytes between microbatches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jax.Array):
+    a = jnp.max(jnp.abs(g))
+    scale = jnp.where(a > 0, a / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, error):
+    """Returns ((q, scale) pytrees, new_error)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _quantize(gf)
+        deq = _dequantize(q, s, jnp.float32)
+        return (q, s), gf - deq
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = tdef.unflatten([o[0] for o in outs])
+    new_err = tdef.unflatten([o[1] for o in outs])
+    return qs, new_err
+
+
+def decompress(qs, like):
+    flat_q, tdef = jax.tree_util.tree_flatten(like)
+    qs_flat = tdef.flatten_up_to(qs)
+    return tdef.unflatten([_dequantize(q, s, l.dtype)
+                           for (q, s), l in zip(qs_flat, flat_q)])

@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, base_lr: float, warmup: int, total: int,
+                       min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def constant(step, *, base_lr: float):
+    return jnp.full_like(step, base_lr, dtype=jnp.float32)

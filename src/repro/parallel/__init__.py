@@ -1,0 +1,3 @@
+from .sharding import (param_shardings, batch_shardings, cache_shardings,
+                       param_spec, batch_spec, cache_spec, fsdp_axes,
+                       replicated, tree_paths)

@@ -1,0 +1,187 @@
+"""Sharding rules: parameter/cache/batch pytrees -> NamedSharding.
+
+Axes (launch/mesh.py): single-pod mesh (data=16, model=16); multi-pod mesh
+(pod=2, data=16, model=16).  Conventions:
+
+  fsdp  = ("pod", "data") when the pod axis exists, else ("data",)
+          — ZeRO-3-style weight/optimizer sharding; XLA SPMD inserts the
+          per-layer all-gathers.
+  model = tensor-parallel axis: attention heads / FFN hidden / vocab / experts.
+
+Every rule is divisibility-checked against the actual dim; axes that don't
+divide are dropped (replicated) — this is what makes odd dims (whisper vocab
+51865, llama4 40 heads) compile cleanly on a fixed 16x16 mesh.  N:M blocks
+live along the *input* dim of each projection; that dim is sharded over fsdp
+in multiples of d_model/|fsdp| >= 256, preserving 16- and 256-block
+alignment (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Return axes if dim divides evenly, else None (replicate)."""
+    if axes is None:
+        return None
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def _spec(mesh: Mesh, shape, per_dim_axes) -> P:
+    assert len(shape) == len(per_dim_axes)
+    return P(*[_fit(mesh, d, a) for d, a in zip(shape, per_dim_axes)])
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+# (regex on the leaf path, per-dim axes for the LAST n dims; leading dims —
+# layer stack [L], expert [E] handled explicitly)
+def param_spec(mesh: Mesh, path: str, shape) -> P:
+    fs = fsdp_axes(mesh)
+    p = path.lower()
+    nd = len(shape)
+
+    def tail(*axes):
+        """Pad with None for leading (stack) dims."""
+        return _spec(mesh, shape, (None,) * (nd - len(axes)) + tuple(axes))
+
+    # ---- embeddings / head -------------------------------------------------
+    if re.search(r"embed|lm_head", p):
+        return tail("model", fs)
+    # ---- norms / scalar-ish ------------------------------------------------
+    if nd <= 2 and re.search(r"norm|a_log|dt_bias|scale|\bd\b|r_gates", p):
+        return P(*([None] * nd))
+    if "r_gates" in p:
+        return P(*([None] * nd))
+    # ---- MoE ---------------------------------------------------------------
+    if "router" in p:
+        return P(*([None] * nd))                 # small; replicated for EP
+    # expert weights match the EP+TP layout (models/moe.py): experts over
+    # fsdp (when divisible), ff over model.
+    if re.search(r"we_(gate|up)", p):            # [L, E, d, ff]
+        if shape[1] % axis_size(mesh, fs) == 0:
+            return _spec(mesh, shape, (None, fs, None, "model"))
+        return _spec(mesh, shape, (None, None, fs, "model"))
+    if "we_down" in p:                           # [L, E, ff, d]
+        if shape[1] % axis_size(mesh, fs) == 0:
+            return _spec(mesh, shape, (None, fs, "model", None))
+        return _spec(mesh, shape, (None, None, "model", fs))
+    # ---- compressed SparseWeight buffers (models/sparse_serving.py) --------
+    if re.search(r"nm_values|nm_meta", p):       # [L, out, X]
+        if shape[-1] % axis_size(mesh, fs) == 0:
+            return tail("model", fs)
+        # odd compressed-in dim (e.g. qwen2-vl d_ff/16=1848): fold fsdp into
+        # the out dim instead of replicating multi-GiB metadata
+        return tail(("model",) + fs, None)
+    if re.search(r"o_values|o_meta", p):         # [L, out, in/256, n*]
+        if shape[-2] % axis_size(mesh, fs) == 0:
+            return _spec(mesh, shape, (None,) * (nd - 3) + ("model", fs, None))
+        return _spec(mesh, shape, (None,) * (nd - 3) + (("model",) + fs, None, None))
+    # ---- column-parallel: out dim = heads*hd / ff / gates ------------------
+    if re.search(r"wq|wk|wv|w_gate|w_up|ws_gate|ws_up|in_proj|w_q|w_k|w_v|"
+                 r"w_gates|w_slstm|c_wq|c_wk|c_wv", p):
+        return tail("model", fs)
+    # ---- row-parallel: in dim = heads*hd / ff ------------------------------
+    if re.search(r"wo|w_down|ws_down|out_proj|c_wo", p):
+        return tail(fs, "model")
+    # default: replicate
+    return P(*([None] * nd))
+
+
+def tree_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    """NamedSharding pytree mirroring ``params`` (works on ShapeDtypeStructs)."""
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return NamedSharding(mesh, param_spec(mesh, name, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# batches / caches / optimizer state
+# --------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, shape, seq_shard: bool = False) -> P:
+    """tokens/labels [B, S] or embeds [B, S, d] / positions [3, B, S]."""
+    fs = fsdp_axes(mesh)
+    nd = len(shape)
+    if nd == 3 and shape[0] == 3:                # M-RoPE positions [3, B, S]
+        return _spec(mesh, shape, (None, fs, "model" if seq_shard else None))
+    if seq_shard:                                # long-context, B=1: SP
+        axes = [None] * nd
+        axes[1 if nd >= 2 else 0] = fs
+        return _spec(mesh, shape, tuple(axes))
+    return _spec(mesh, shape, (fs,) + (None,) * (nd - 1))
+
+
+def batch_shardings(mesh: Mesh, batch, seq_shard: bool = False):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(mesh, leaf.shape, seq_shard)),
+        batch)
+
+
+def cache_spec(mesh: Mesh, path: str, shape, seq_shard: bool = False) -> P:
+    """KV caches [L,B,S,KV,hd] / [B,S,KV,hd]; SSM states [B,H,dk,dv] etc."""
+    fs = fsdp_axes(mesh)
+    nd = len(shape)
+    if nd == 0 or "pos" in path:
+        return P()
+    model_n = axis_size(mesh, ("model",))
+    if nd == 5:                                   # [L, B, S, KV, hd]
+        if seq_shard:
+            return _spec(mesh, shape, (None, None, fs, "model", None))
+        if shape[3] % model_n == 0:               # enough KV heads: shard heads
+            return _spec(mesh, shape, (None, fs, None, "model", None))
+        # GQA with KV < mesh: shard the sequence dim instead (flash-decoding
+        # layout — softmax partials all-reduce over `model`)
+        return _spec(mesh, shape, (None, fs, "model", None, None))
+    if nd == 4:                                   # [B, S, KV, hd] or [B,H,dk,dv]
+        if "kv" in path:
+            if seq_shard:
+                return _spec(mesh, shape, (None, fs, "model", None))
+            if shape[2] % model_n == 0:
+                return _spec(mesh, shape, (fs, None, "model", None))
+            return _spec(mesh, shape, (fs, "model", None, None))
+        return _spec(mesh, shape, (fs, "model", None, None))
+    if nd >= 2:                                   # SSM state [B, H, ...]
+        return _spec(mesh, shape, (fs, "model") + (None,) * (nd - 2))
+    return P(None)
+
+
+def cache_shardings(mesh: Mesh, caches, seq_shard: bool = False):
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return NamedSharding(mesh, cache_spec(mesh, name, leaf.shape, seq_shard))
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

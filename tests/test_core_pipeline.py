@@ -1,0 +1,182 @@
+"""Tests for scoring, equalization, variance correction, outliers, packing,
+and the 4-stage pipeline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ActStats, score, ria_score, smoothquant_scales,
+                        equalize_weights, equalized_view_for_scoring,
+                        variance_correction_factor, apply_variance_correction,
+                        extract_structured_outliers, unstructured_outlier_mask,
+                        SparsifyConfig, sparsify_linear, dense_effective_weight,
+                        pack_nm, nm_mask, unpack_metadata, compression_report)
+from repro.core.equalize import check_equivalence
+
+
+@pytest.fixture(scope="module")
+def wx():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 512), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 512))
+    # inject activation outliers in a few channels (the paper's setting)
+    x = x.at[:, :8].mul(25.0)
+    return w, x
+
+
+def _stats(x):
+    return ActStats.init(x.shape[-1]).update(x)
+
+
+class TestScoring:
+    def test_shapes_and_nonneg(self, wx):
+        w, x = wx
+        st_ = _stats(x)
+        for m in ("magnitude", "wanda", "ria"):
+            s = score(m, w, st_)
+            assert s.shape == w.shape
+            assert (np.asarray(s) >= 0).all()
+
+    def test_ria_prefers_activation_outlier_channels(self, wx):
+        w, x = wx
+        st_ = _stats(x)
+        s = ria_score(w, st_.l2)
+        # average score on boosted channels must exceed the rest
+        assert float(s[:, :8].mean()) > float(s[:, 8:].mean())
+
+    def test_wanda_scales_with_activation(self, wx):
+        w, x = wx
+        st_ = _stats(x)
+        s = score("wanda", w, st_)
+        ratio = float(s[:, :8].mean() / s[:, 8:].mean())
+        assert ratio > 5.0
+
+
+class TestEqualize:
+    def test_math_equivalence(self, wx):
+        """(W*s)(x/s) == W x — Eq. 1."""
+        w, x = wx
+        scales = smoothquant_scales(w, _stats(x).max_abs)
+        lhs, rhs = check_equivalence(w, x, scales)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_weights_unchanged_by_pipeline(self, wx):
+        """Equalization only affects the scoring view (paper impl. note)."""
+        w, x = wx
+        view = equalized_view_for_scoring(w, _stats(x).max_abs)
+        assert not np.allclose(np.asarray(view), np.asarray(w))
+        # original w untouched (functional), and effective weight values come
+        # from w not view:
+        cfg = SparsifyConfig(outlier_pattern=None)
+        sl = sparsify_linear(w, _stats(x), cfg)
+        eff = np.asarray(dense_effective_weight(w, sl, cfg))
+        kept = eff != 0
+        # non-VC entries are exactly original values under use_vc=False
+        cfg2 = dataclasses.replace(cfg, use_variance_correction=False)
+        sl2 = sparsify_linear(w, _stats(x), cfg2)
+        eff2 = np.asarray(dense_effective_weight(w, sl2, cfg2))
+        w_np = np.asarray(w)
+        assert np.array_equal(eff2[eff2 != 0], w_np[eff2 != 0])
+
+
+class TestVarianceCorrection:
+    def test_restores_variance(self, wx):
+        w, _ = wx
+        mask = np.asarray(nm_mask(jnp.abs(w), (2, 4)))
+        corrected = np.asarray(apply_variance_correction(w, jnp.asarray(mask)))
+        kept = corrected[mask]
+        assert kept.var() == pytest.approx(float(jnp.var(w)), rel=1e-3)
+
+    def test_zero_off_mask(self, wx):
+        w, _ = wx
+        mask = nm_mask(jnp.abs(w), (8, 16))
+        corrected = np.asarray(apply_variance_correction(w, mask))
+        assert (corrected[~np.asarray(mask)] == 0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 9999))
+    def test_property_factor_ge_one_for_magnitude_pruning(self, seed):
+        """Magnitude pruning keeps large entries -> variance of kept exceeds
+        dense -> factor < 1; random masks -> factor ~ 1. Both stay finite."""
+        w = jax.random.normal(jax.random.PRNGKey(seed), (32, 64))
+        mask = nm_mask(jnp.abs(w), (2, 4))
+        f = float(variance_correction_factor(w, mask))
+        assert np.isfinite(f) and 0.1 < f < 10.0
+
+
+class TestOutliers:
+    def test_structured_roundtrip(self, wx):
+        w, x = wx
+        s = score("ria", w, _stats(x))
+        o = extract_structured_outliers(w, s, (16, 256))
+        dense = np.asarray(o.to_dense())
+        mask = np.asarray(o.mask())
+        assert mask.sum() == w.shape[0] * (w.shape[1] // 256) * 16
+        np.testing.assert_array_equal(dense[mask], np.asarray(w)[mask])
+        assert (dense[~mask] == 0).all()
+
+    def test_unstructured_budget(self, wx):
+        w, x = wx
+        s = score("ria", w, _stats(x))
+        m = unstructured_outlier_mask(s, 16 / 256)
+        frac = float(jnp.mean(m.astype(jnp.float32)))
+        assert frac == pytest.approx(16 / 256, rel=0.05)
+
+
+class TestPacking:
+    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (8, 16)])
+    def test_roundtrip(self, wx, n, m):
+        w, _ = wx
+        mask = nm_mask(jnp.abs(w), (n, m))
+        pruned = jnp.where(mask, w, 0)
+        pk = pack_nm(pruned, mask, (n, m))
+        np.testing.assert_array_equal(np.asarray(pk.to_dense()),
+                                      np.asarray(pruned))
+        meta = pk.packed_metadata()
+        np.testing.assert_array_equal(np.asarray(unpack_metadata(meta, n)),
+                                      np.asarray(pk.indices))
+
+    def test_compression_report(self):
+        rep = compression_report(4096, 4096, "8:16", "16:256")
+        assert rep["ratio"] < 0.66                     # beats dense by >1.5x
+        assert rep["nm_meta_bytes"] == 4096 * 4096 * 0.875 / 8
+
+
+class TestPipeline:
+    def test_density_and_structure(self, wx):
+        w, x = wx
+        cfg = SparsifyConfig(weight_pattern="8:16", outlier_pattern="16:256")
+        sl = sparsify_linear(w, _stats(x), cfg)
+        from repro.core import validate_nm_mask
+        assert bool(validate_nm_mask(sl.nm_mask, (8, 16)))
+        eff = dense_effective_weight(w, sl, cfg)
+        density = float(jnp.mean((eff != 0).astype(jnp.float32)))
+        assert 0.45 <= density <= 0.57
+
+    def test_salient_values_exact(self, wx):
+        """Outliers must survive pruning bit-exact (incl. under VC)."""
+        w, x = wx
+        cfg = SparsifyConfig(weight_pattern="2:4", outlier_pattern="16:256")
+        sl = sparsify_linear(w, _stats(x), cfg)
+        eff = np.asarray(dense_effective_weight(w, sl, cfg))
+        sm = np.asarray(sl.salient_mask)
+        np.testing.assert_array_equal(eff[sm], np.asarray(w)[sm])
+
+    def test_reconstruction_better_with_outliers(self, wx):
+        """Recovering outliers reduces layer output error (paper Table 5)."""
+        w, x = wx
+        st_ = _stats(x)
+        y_ref = np.asarray(x @ w.T)
+        errs = {}
+        for op in (None, "4:256", "16:256"):
+            cfg = SparsifyConfig(weight_pattern="2:4", outlier_pattern=op,
+                                 scorer="ria")
+            sl = sparsify_linear(w, st_, cfg)
+            eff = dense_effective_weight(w, sl, cfg)
+            errs[op] = float(np.square(np.asarray(x @ eff.T) - y_ref).mean())
+        assert errs["4:256"] < errs[None]
+        assert errs["16:256"] < errs["4:256"]

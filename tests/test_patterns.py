@@ -1,0 +1,68 @@
+"""Unit + property tests for N:M patterns and masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Pattern, nm_mask, topn_block_mask, validate_nm_mask,
+                        block_topn_indices, mask_sparsity, WEIGHT_PATTERNS,
+                        OUTLIER_PATTERNS)
+
+
+@pytest.mark.parametrize("n,m", list(WEIGHT_PATTERNS) + list(OUTLIER_PATTERNS))
+def test_mask_invariant(n, m):
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 4 * m))
+    mask = nm_mask(jnp.abs(w), (n, m))
+    assert bool(validate_nm_mask(mask, (n, m)))
+    assert float(mask_sparsity(mask)) == pytest.approx(1 - n / m)
+
+
+def test_paper_table1_metadata():
+    """Reproduces paper Table 1 exactly: configurations and bits/element."""
+    expected = {(2, 4): (6, 0.75), (4, 8): (70, 0.8125),
+                (8, 16): (12870, 0.875), (16, 32): (601080390, 1.0)}
+    for (n, m), (cfgs, bits) in expected.items():
+        p = Pattern(n, m)
+        assert p.configurations == cfgs
+        assert p.paper_bits_per_element() == pytest.approx(bits)
+
+
+def test_mask_keeps_topn():
+    scores = jnp.array([[5.0, 1.0, 4.0, 2.0, 9.0, 8.0, 7.0, 6.0]])
+    mask = topn_block_mask(scores, 2, 4)
+    np.testing.assert_array_equal(
+        np.asarray(mask), [[True, False, True, False, True, True, False, False]])
+
+
+def test_block_topn_indices_sorted_and_valid():
+    scores = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    idx = block_topn_indices(scores, 8, 16)
+    assert idx.shape == (4, 4, 8)
+    assert (np.diff(np.asarray(idx), axis=-1) > 0).all()   # strictly ascending
+    assert (np.asarray(idx) >= 0).all() and (np.asarray(idx) < 16).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4).map(lambda k: 2 ** k),
+       st.integers(0, 10_000), st.integers(1, 6))
+def test_property_exact_n_per_block(logm, seed, rows):
+    m = logm * 2
+    n = m // 2
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, 4 * m))
+    mask = nm_mask(jnp.abs(w), (n, m))
+    blocks = np.asarray(mask).reshape(rows, -1, m)
+    assert (blocks.sum(-1) == n).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_mask_selects_larger_scores(seed):
+    """Every kept element within a block scores >= every dropped element."""
+    s = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (3, 64)))
+    mask = np.asarray(nm_mask(jnp.asarray(s), (8, 16)))
+    for r in range(3):
+        for b in range(4):
+            blk_s = s[r, b * 16:(b + 1) * 16]
+            blk_m = mask[r, b * 16:(b + 1) * 16]
+            assert blk_s[blk_m].min() >= blk_s[~blk_m].max() - 1e-7

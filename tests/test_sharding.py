@@ -1,0 +1,96 @@
+"""Sharding-rule unit tests (no 512-device env needed: 4-device host mesh)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (param_spec, batch_spec, cache_spec,
+                                     fsdp_axes)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # a virtual (4, 4) mesh: spec resolution only needs axis SIZES
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+class TestParamSpecs:
+    def test_column_parallel(self, mesh):
+        assert param_spec(mesh, "layers/wq", (24, 2048, 4096)) == \
+            P(None, "model", ("data",))
+
+    def test_row_parallel(self, mesh):
+        assert param_spec(mesh, "layers/wo", (24, 4096, 2048)) == \
+            P(None, ("data",), "model")
+
+    def test_norms_replicated(self, mesh):
+        assert param_spec(mesh, "layers/attn_norm", (24, 4096)) == P(None, None)
+
+    def test_embed(self, mesh):
+        assert param_spec(mesh, "embed", (32000, 4096)) == P("model", ("data",))
+
+    def test_divisibility_fallback(self, mesh):
+        # whisper vocab 51865 is not divisible by 4 -> vocab dim replicated
+        sp = param_spec(mesh, "embed", (51865, 1024))
+        assert sp == P(None, ("data",))
+
+    def test_moe_expert_ep_layout(self, mesh):
+        # 128 experts divisible by fsdp=4 -> experts over data, ff over model
+        assert param_spec(mesh, "layers/moe/we_gate", (48, 128, 5120, 8192)) == \
+            P(None, ("data",), None, "model")
+        # 6 experts not divisible -> fallback TP-only
+        sp = param_spec(mesh, "layers/moe/we_gate", (48, 6, 5120, 8192))
+        assert sp == P(None, None, ("data",), "model")
+
+    def test_router_replicated(self, mesh):
+        assert param_spec(mesh, "layers/moe/router", (48, 128, 5120)) == \
+            P(None, None, None)
+
+
+class TestBatchCacheSpecs:
+    def test_tokens(self, mesh):
+        assert batch_spec(mesh, (256, 4096)) == P(("data",), None)
+
+    def test_mrope_positions(self, mesh):
+        assert batch_spec(mesh, (3, 256, 4096)) == P(None, ("data",), None)
+
+    def test_seq_shard_for_batch1(self, mesh):
+        assert batch_spec(mesh, (1, 524288), seq_shard=True) == \
+            P(None, ("data",))
+
+    def test_kv_cache_head_sharded_when_divisible(self, mesh):
+        assert cache_spec(mesh, "k", (24, 128, 32768, 16, 64)) == \
+            P(None, ("data",), None, "model", None)
+
+    def test_kv_cache_seq_sharded_for_gqa(self, mesh):
+        # kv=2 < model axis 4 -> flash-decoding layout (seq over model)
+        assert cache_spec(mesh, "k", (24, 128, 32768, 2, 64)) == \
+            P(None, ("data",), "model", None, None)
+
+    def test_pos_scalar(self, mesh):
+        assert cache_spec(mesh, "pos", ()) == P()
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """End-to-end dry-run of one small cell in a fresh 512-device process."""
+    code = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "from repro.launch.dryrun import run_cell\n"
+        "rec = run_cell('internlm2-1.8b', 'decode_32k', multi_pod=False,"
+        " probe=False, out_dir=None, verbose=False)\n"
+        "assert rec['status'] == 'ok', rec\n"
+        "assert rec['full']['collective_bytes']['total'] > 0\n"
+        "print('CELL_OK')\n"
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+                         env=env, timeout=900)
+    assert "CELL_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,122 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The centerpiece: train a small LM on structured synthetic data, run the
+paper's full sparsification pipeline, and assert the paper's QUALITATIVE
+claims (method orderings) hold — the absolute numbers live in benchmarks/.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import SparsifyConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import get_model
+from repro.eval.harness import (collect_activation_stats, eval_ppl,
+                                sparsify_model, train_small_lm)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """A tiny llama trained enough to be structurally meaningful (~60s CPU)."""
+    cfg = dataclasses.replace(configs.get_smoke("llama-paper"),
+                              n_layers=2, d_model=128, d_ff=256, vocab=256)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, batch=16, seed=0)
+    params, losses = train_small_lm(cfg, data, steps=120, lr=1e-2)
+    assert losses[-1] < 0.8 * losses[0], "toy LM failed to learn"
+    return cfg, params, data
+
+
+def test_pruning_method_ordering(trained):
+    """Paper Table 4 ordering: magnitude >= RIA >= RIA(+SQ) PPL; VC helps."""
+    cfg, params, data = trained
+    stats = collect_activation_stats(cfg, params, data.calibration(4))
+    dense_ppl = eval_ppl(cfg, params, data, n_batches=4)
+
+    def run(**kw):
+        scfg = SparsifyConfig(weight_pattern="2:4", outlier_pattern=None, **kw)
+        sp = sparsify_model(cfg, params, stats, scfg)
+        return eval_ppl(cfg, sp, data, n_batches=4)
+
+    ppl_mag = run(scorer="magnitude", use_smoothquant=False,
+                  use_variance_correction=False)
+    ppl_ria = run(scorer="ria", use_smoothquant=False,
+                  use_variance_correction=False)
+    ppl_ria_sq_vc = run(scorer="ria", use_smoothquant=True,
+                        use_variance_correction=True)
+
+    assert dense_ppl < ppl_ria_sq_vc
+    assert ppl_ria <= ppl_mag * 1.05          # RIA no worse than magnitude
+    assert ppl_ria_sq_vc <= ppl_ria * 1.10    # SQ+VC do not hurt
+
+
+def test_pattern_flexibility_ordering(trained):
+    """Paper Table 1 ordering: PPL(2:4) >= PPL(4:8) >= PPL(8:16)."""
+    cfg, params, data = trained
+    stats = collect_activation_stats(cfg, params, data.calibration(4))
+    ppls = {}
+    for pat in ("2:4", "4:8", "8:16", "16:32"):
+        scfg = SparsifyConfig(weight_pattern=pat, outlier_pattern=None,
+                              scorer="ria")
+        sp = sparsify_model(cfg, params, stats, scfg)
+        ppls[pat] = eval_ppl(cfg, sp, data, n_batches=4)
+    assert ppls["8:16"] <= ppls["2:4"] * 1.02
+    assert ppls["16:32"] <= ppls["4:8"] * 1.02
+
+
+def test_outlier_recovery_helps(trained):
+    """Paper Tables 5/6: structured outlier recovery improves PPL, more
+    outliers help more."""
+    cfg, params, data = trained
+    stats = collect_activation_stats(cfg, params, data.calibration(4))
+    ppls = {}
+    for op in (None, "4:256", "16:256"):
+        scfg = SparsifyConfig(weight_pattern="2:4", outlier_pattern=op,
+                              scorer="ria")
+        sp = sparsify_model(cfg, params, stats, scfg)
+        ppls[op] = eval_ppl(cfg, sp, data, n_batches=4)
+    assert ppls["4:256"] <= ppls[None] * 1.02
+    assert ppls["16:256"] <= ppls["4:256"] * 1.02
+
+
+def test_sparse_serving_matches_dense_effective(trained):
+    """Deploying compressed weights (serve path) changes nothing numerically:
+    sparse-serving logits == dense-effective logits."""
+    cfg, params, data = trained
+    from repro.models.sparse_serving import sparsify_for_serving
+    scfg = SparsifyConfig(scorer="magnitude", use_smoothquant=False)
+    sp_serve, report = sparsify_for_serving(params, scfg)
+    sp_dense = sparsify_model(cfg, params, None, scfg)
+
+    batch = data.batch_at(0)
+    toks = {"tokens": jnp.asarray(batch["tokens"][:2, :32])}
+    from repro.models import transformer as tfm
+    l1, _ = tfm.forward(sp_serve, toks, cfg)
+    l2, _ = tfm.forward(sp_dense, toks, cfg)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), rtol=5e-3, atol=5e-2)
+    assert report["ratio"] < 0.70
+
+
+def test_train_driver_with_failure_recovers(tmp_path):
+    """launch.train end-to-end with a simulated host failure mid-run."""
+    from repro.launch.train import main
+    report = main(["--arch", "llama-paper", "--smoke-arch",
+                   "--steps", "12", "--batch", "4", "--seq", "32",
+                   "--save-every", "4", "--fail-at-step", "6",
+                   "--ckpt-dir", str(tmp_path)])
+    assert report.restarts == 1
+    assert report.restored_steps == [4]
+    assert np.isfinite(report.losses[-1])
+
+
+def test_serve_driver_sparse(capsys):
+    from repro.launch.serve import main
+    gen = main(["--arch", "llama-paper", "--smoke-arch", "--batch", "2",
+                "--prompt-len", "16", "--gen", "4", "--sparse"])
+    assert gen.shape == (2, 4)
+    out = capsys.readouterr().out
+    assert "sparse deploy" in out
