@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Canonical tier-1 verification (ROADMAP.md): the full test suite, fail-fast.
+# Usage: scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -85,6 +85,8 @@ def collective_counts(hlo_text: str) -> dict:
 
 def cost_summary(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # older JAX: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     mem = {}
     if ma is not None:

@@ -10,16 +10,17 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    # NOTE: no axis_types kwarg — jax.sharding.AxisType doesn't exist on the
+    # pinned JAX, and Auto (what these meshes want) is the default where it
+    # does, so the bare call is correct on every supported version.
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh for CPU smoke/bench runs (same axis names)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants (roofline):

@@ -1,9 +1,18 @@
-"""Serving driver: batched prefill + decode loop, dense or SPARSE weights.
+"""Serving driver: thin CLI over the continuous-batching engine.
 
 The sparse path is the paper's deployment story: linear weights are replaced
 by their 8:16 (+N:256 outlier) compressed form at load time
 (models/sparse_serving.py); on TPU the fused Pallas kernel streams compressed
 weights, on CPU the reference decompress path runs (same numerics).
+
+Modes:
+  default      continuous-batching engine (serving/): slot-based KV pool,
+               interleaved prefill/decode, per-request sampling.  Token-
+               identical to the legacy loop under greedy decoding.
+  --legacy     one-shot lock-step prefill+decode loop; works for every model
+               family (ssm / hybrid / encdec / vlm included).
+  --trace F    replay a JSON request trace (serving/trace.py) through the
+               engine and report tok/s + latency percentiles.
 
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch llama-paper-smoke \
@@ -18,29 +27,15 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get, get_smoke
-from ..models import get_model
+from ..models import get_model, grow_caches
 from ..core import SparsifyConfig
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama-paper-smoke")
-    ap.add_argument("--smoke-arch", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--sparse", action="store_true",
-                    help="deploy 8:16 + 16:256-outlier compressed weights")
-    ap.add_argument("--weight-pattern", default="8:16")
-    ap.add_argument("--outlier-pattern", default="16:256")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_smoke(args.arch) if args.smoke_arch else get(args.arch)
+def build_params(cfg, args):
+    """Init the model (optionally deploying compressed sparse weights)."""
     zoo = get_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = zoo.init(key)
-
     if args.sparse:
         from ..models.sparse_serving import sparsify_for_serving
         scfg = SparsifyConfig(weight_pattern=args.weight_pattern,
@@ -51,10 +46,15 @@ def main(argv=None):
               f"bytes {report['dense_bytes']/2**20:.1f}MiB -> "
               f"{report['compressed_bytes']/2**20:.1f}MiB "
               f"({report['ratio']:.3f}x)")
+    return zoo, params, key
 
+
+def run_oneshot(cfg, zoo, params, key, args):
+    """Legacy lock-step loop: batched prefill, then decode the whole batch
+    one token at a time.  Supports every model family."""
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
-    pad = args.prompt_len + args.gen
-    batch = {"tokens": jnp.pad(prompt, ((0, 0), (0, 0)))}
+    capacity = args.prompt_len + args.gen
+    batch = {"tokens": prompt}
     if cfg.family in ("vlm", "encdec"):
         batch["embeds"] = jax.random.normal(key, (args.batch, args.prompt_len,
                                                   cfg.d_model), jnp.float32)
@@ -66,13 +66,8 @@ def main(argv=None):
 
     t0 = time.time()
     logits, caches = zoo.prefill(params, batch)
-    # pad caches to prompt+gen when the family uses dense KV buffers
-    if isinstance(caches, dict) and "k" in caches:
-        grow = pad - caches["k"].shape[2]
-        widths = [(0, 0), (0, 0), (0, grow), (0, 0), (0, 0)]
-        caches = {**caches,
-                  "k": jnp.pad(caches["k"], widths),
-                  "v": jnp.pad(caches["v"], widths)}
+    # reserve decode headroom in every family's cache layout up front
+    caches = grow_caches(caches, capacity)
     prefill_s = time.time() - t0
 
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
@@ -87,6 +82,96 @@ def main(argv=None):
     print(f"prefill {args.batch}x{args.prompt_len} in {prefill_s:.2f}s; "
           f"decoded {args.gen} tokens in {decode_s:.2f}s "
           f"({args.batch*(args.gen-1)/max(decode_s,1e-9):.1f} tok/s)")
+    return gen
+
+
+def run_engine(cfg, params, key, args):
+    """Continuous-batching engine on a batch of random prompts."""
+    from ..serving import SamplingParams, ServingEngine
+    engine = ServingEngine(cfg, params, n_slots=args.slots,
+                           max_len=args.prompt_len + args.gen,
+                           max_queue=args.max_queue,
+                           max_prefill_per_step=args.max_prefill_per_step)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    sp = SamplingParams(max_new_tokens=args.gen,
+                        temperature=args.temperature, top_k=args.top_k)
+    t0 = time.time()
+    reqs = [engine.submit(prompt[i], sp) for i in range(args.batch)]
+    engine.run()
+    wall = time.time() - t0
+    n_tok = sum(len(r.tokens) for r in reqs)
+    print(f"engine: {args.batch} requests, {n_tok} tokens in {wall:.2f}s "
+          f"({n_tok/max(wall,1e-9):.1f} tok/s, {engine.n_steps} steps, "
+          f"{args.slots} slots)")
+    return jnp.asarray([r.tokens for r in reqs], jnp.int32)
+
+
+def run_trace(cfg, params, args):
+    """Replay a recorded request trace through the engine."""
+    from ..runtime.metrics import format_summary, summarize
+    from ..serving import ServingEngine, load_trace, replay
+    engine = ServingEngine(cfg, params, n_slots=args.slots,
+                           max_len=args.max_len,
+                           max_queue=args.max_queue,
+                           max_prefill_per_step=args.max_prefill_per_step)
+    trace = load_trace(args.trace)
+    res = replay(engine, trace, time_scale=args.time_scale)
+    summary = summarize([r.metrics for r in res["finished"]], res["wall_s"])
+    print(format_summary("trace", summary))
+    if res["rejected"]:
+        print(f"rejected by admission control: {res['rejected']}")
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-paper-smoke")
+    ap.add_argument("--smoke-arch", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sparse", action="store_true",
+                    help="deploy 8:16 + 16:256-outlier compressed weights")
+    ap.add_argument("--weight-pattern", default="8:16")
+    ap.add_argument("--outlier-pattern", default="16:256")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--legacy", action="store_true",
+                    help="one-shot lock-step loop instead of the engine")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="engine KV-pool slots (concurrent requests)")
+    ap.add_argument("--max-prefill-per-step", type=int, default=2)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--trace", default=None,
+                    help="JSON request trace to replay through the engine")
+    ap.add_argument("--max-len", type=int, default=256,
+                    help="per-slot KV capacity (trace mode)")
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="compress (<1) / stretch (>1) trace arrival gaps")
+    args = ap.parse_args(argv)
+
+    from ..serving import SUPPORTED_FAMILIES
+    cfg = get_smoke(args.arch) if args.smoke_arch else get(args.arch)
+    if args.trace is not None and args.legacy:
+        ap.error("--trace replays through the engine; drop --legacy")
+    if args.trace is not None and cfg.family not in SUPPORTED_FAMILIES:
+        ap.error(f"--trace replays through the engine, which serves "
+                 f"{SUPPORTED_FAMILIES} families; {args.arch!r} is "
+                 f"{cfg.family!r}")
+
+    zoo, params, key = build_params(cfg, args)
+
+    if args.trace is not None:
+        return run_trace(cfg, params, args)
+
+    if args.legacy or cfg.family not in SUPPORTED_FAMILIES:
+        if not args.legacy:
+            print(f"family {cfg.family!r} not engine-served yet; "
+                  f"using one-shot loop")
+        gen = run_oneshot(cfg, zoo, params, key, args)
+    else:
+        gen = run_engine(cfg, params, key, args)
     print("sample:", gen[0, :12].tolist())
     return gen
 

@@ -1,4 +1,5 @@
 """Model zoo: dense/MoE/VLM transformer, xLSTM, Mamba2+Zamba2 hybrid,
 Whisper enc-dec — uniform API via model_zoo.get_model."""
 
-from .model_zoo import ModelZoo, get_model, input_specs, cache_specs, param_specs
+from .model_zoo import (ModelZoo, get_model, grow_caches, input_specs,
+                        cache_specs, param_specs)

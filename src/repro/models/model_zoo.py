@@ -148,6 +148,36 @@ def cache_specs(cfg, shape) -> dict:
     raise ValueError(cfg.family)
 
 
+def grow_caches(caches: dict, new_len: int) -> dict:
+    """Pad decode caches so the sequence axis holds ``new_len`` positions.
+
+    Handles every family's cache layout: dense/moe/vlm and encdec grow the
+    self-attention "k"/"v" buffers [L, B, S, KV, hd] (encdec cross-attention
+    "ck"/"cv" stay at encoder length); hybrid grows each per-application
+    ("kv") pair [B, S, KV, hd]; recurrent state ("states") needs no growth.
+    No-op for buffers already at >= new_len.
+    """
+    if not isinstance(caches, dict):
+        return caches
+    out = dict(caches)
+    for key in ("k", "v"):
+        if key in out and hasattr(out[key], "shape"):
+            cur = out[key].shape[2]
+            if cur < new_len:
+                widths = [(0, 0)] * out[key].ndim
+                widths[2] = (0, new_len - cur)
+                out[key] = jnp.pad(out[key], widths)
+    if "kv" in out:
+        def pad_pair(kv):
+            k, v = kv
+            if k.shape[1] >= new_len:
+                return (k, v)
+            widths = [(0, 0), (0, new_len - k.shape[1]), (0, 0), (0, 0)]
+            return (jnp.pad(k, widths), jnp.pad(v, widths))
+        out["kv"] = [pad_pair(kv) for kv in out["kv"]]
+    return out
+
+
 def param_specs(cfg) -> Any:
     """ShapeDtypeStruct pytree of the model params (eval_shape, no alloc)."""
     zoo = get_model(cfg)

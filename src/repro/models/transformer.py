@@ -123,23 +123,36 @@ def block_forward(lp, x, positions, cfg, q_chunks: int = 1, causal: bool = True)
 
 
 def block_decode(lp, x, k_cache, v_cache, pos, cfg):
-    """One-token block. x: [B,1,d]; caches [B,Smax,KV,hd]; pos: scalar int."""
+    """One-token block. x: [B,1,d]; caches [B,Smax,KV,hd].
+
+    ``pos`` is either a scalar filled length (lock-step batch: every row sits
+    at the same position) or a [B] vector of per-row filled lengths
+    (slot-indexed caches — the serving engine's continuous batch, where each
+    slot is at a different point in its sequence)."""
     from ..parallel import policy as pol
     B = x.shape[0]
+    per_slot = jnp.ndim(pos) == 1
     x = pol.shard(x, ("fsdp", None, None))
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    base = pos[:, None] if per_slot else jnp.broadcast_to(pos, (B, 1))
     if cfg.mrope_sections is not None:
-        positions = jnp.broadcast_to(pos, (3, B, 1))
+        positions = jnp.broadcast_to(base[None], (3, B, 1))
     else:
-        positions = jnp.broadcast_to(pos, (B, 1))
+        positions = base
     q, k, v = _project_qkv(lp, h, cfg, positions)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, 1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, 1)
-    cache_len = jnp.full((B,), pos + 1, jnp.int32)
+    if per_slot:
+        upd = lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(c, u, p, 0)
+        k_cache = jax.vmap(upd)(k_cache, k.astype(k_cache.dtype), pos)
+        v_cache = jax.vmap(upd)(v_cache, v.astype(v_cache.dtype), pos)
+        cache_len = pos + 1
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, 1)
+        cache_len = jnp.full((B,), pos + 1, jnp.int32)
     if cfg.window is not None:
         # sliding window: mask everything older than `window`
         lo = jnp.maximum(pos + 1 - cfg.window, 0)
-        valid_from = jnp.full((B,), lo, jnp.int32)
+        valid_from = jnp.broadcast_to(lo, (B,)).astype(jnp.int32)
         attn = _windowed_decode(q, k_cache, v_cache, cache_len, valid_from)
     else:
         attn = decode_attention(q, k_cache, v_cache, cache_len)
@@ -273,7 +286,9 @@ def prefill(params, batch, cfg, unroll: bool = False):
 def decode_step(params, caches, batch, cfg, unroll: bool = False):
     """One new token for every sequence. batch: {"tokens": [B, 1]}.
 
-    caches: {"k"/"v": [L, B, Smax, KV, hd], "pos": scalar filled length}.
+    caches: {"k"/"v": [L, B, Smax, KV, hd], "pos": filled length — a scalar
+    (lock-step batch) or a [B] vector (slot-indexed caches: each row of the
+    batch is an independent serving slot at its own sequence position)}.
     """
     tokens = batch["tokens"]
     B = tokens.shape[0]

@@ -1,0 +1,74 @@
+"""Serving/runtime latency instrumentation.
+
+``RequestMetrics`` records one request's lifecycle timestamps (all from the
+engine's injected clock, so tests can drive virtual time); ``summarize``
+folds a set of finished requests into the numbers the benchmark reports:
+throughput (generated tok/s over the measured window) and p50/p99 of
+time-to-first-token, per-output-token latency, and end-to-end latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    arrival: float = 0.0               # submitted to the queue
+    admitted: float = 0.0              # scheduled into a slot (prefill start)
+    first_token: float = 0.0           # first generated token emitted
+    finished: float = 0.0              # final token emitted / evicted
+    n_tokens: int = 0                  # generated tokens (prompt excluded)
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admitted - self.arrival
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from arrival (includes queueing)."""
+        return self.first_token - self.arrival
+
+    @property
+    def e2e(self) -> float:
+        return self.finished - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first."""
+        if self.n_tokens <= 1:
+            return 0.0
+        return (self.finished - self.first_token) / (self.n_tokens - 1)
+
+
+def percentiles(values, ps=(50, 99)) -> dict[str, float]:
+    if not len(values):
+        return {f"p{p}": float("nan") for p in ps}
+    arr = np.asarray(values, np.float64)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
+
+def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
+    """Aggregate finished-request metrics over a ``wall_s``-second window."""
+    done = [m for m in metrics if m.n_tokens > 0]
+    total_tokens = sum(m.n_tokens for m in done)
+    out = {
+        "n_requests": len(done),
+        "total_tokens": total_tokens,
+        "wall_s": wall_s,
+        "tok_per_s": total_tokens / wall_s if wall_s > 0 else float("nan"),
+        "ttft": percentiles([m.ttft for m in done]),
+        "tpot": percentiles([m.tpot for m in done if m.n_tokens > 1]),
+        "e2e": percentiles([m.e2e for m in done]),
+        "queue_wait": percentiles([m.queue_wait for m in done]),
+    }
+    return out
+
+
+def format_summary(name: str, s: dict) -> str:
+    return (f"{name:>8}: {s['n_requests']} req, {s['total_tokens']} tok "
+            f"in {s['wall_s']:.2f}s = {s['tok_per_s']:.1f} tok/s | "
+            f"ttft p50 {s['ttft']['p50']*1e3:.0f}ms p99 {s['ttft']['p99']*1e3:.0f}ms | "
+            f"tpot p50 {s['tpot']['p50']*1e3:.1f}ms p99 {s['tpot']['p99']*1e3:.1f}ms | "
+            f"e2e p50 {s['e2e']['p50']*1e3:.0f}ms p99 {s['e2e']['p99']*1e3:.0f}ms")

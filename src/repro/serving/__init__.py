@@ -1,0 +1,18 @@
+"""Continuous-batching serving engine (slot-based KV pool, interleaved
+prefill/decode scheduling, per-request sampling + streaming callbacks).
+
+  engine = ServingEngine(cfg, params, n_slots=8, max_len=256)
+  req = engine.submit(prompt_tokens, SamplingParams(max_new_tokens=16))
+  engine.run()            # or engine.step() under an external loop
+  req.tokens              # generated ids; req.metrics has ttft/e2e/...
+
+Dense params and SparseWeight compressed params (the paper's 8:16 +
+structured-outlier deployment) are served by the same engine.
+"""
+
+from .cache_pool import SlotKVPool
+from .engine import ServingEngine, SUPPORTED_FAMILIES
+from .request import Request, SamplingParams, Status
+from .scheduler import QueueFull, RequestQueue
+from .trace import (TraceRequest, load_trace, poisson_trace, replay,
+                    save_trace)

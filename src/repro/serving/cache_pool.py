@@ -1,0 +1,74 @@
+"""Slot-based preallocated KV-cache pool.
+
+One allocation at engine start: k/v buffers [L, n_slots, max_len, KV, hd]
+plus a per-slot filled-position vector [n_slots].  Requests are assigned a
+slot for their lifetime; prefill KV is written left-aligned into the slot,
+decode steps write at each slot's own position (models/transformer.py
+slot-indexed decode).  This replaces the old serve-loop pattern of growing
+per-batch caches with ``jnp.pad`` — buffer shapes never change, so the
+decode step compiles exactly once.
+
+Freed slots are immediately reusable: every KV position a new request's
+attention can see ([0, pos)) is freshly written by its own prefill/decode
+before it becomes visible, so no zeroing pass is needed on free.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _install(pool, kv, slots):
+    """In-place (donated) write of an admission group into the pool."""
+    return pool.at[:, slots, :kv.shape[2]].set(kv)
+
+
+class SlotKVPool:
+    def __init__(self, cfg, n_slots: int, max_len: int):
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        shape = (L, n_slots, max_len, KV, hd)
+        self.k = jnp.zeros(shape, cfg.dtype)
+        self.v = jnp.zeros(shape, cfg.dtype)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._free = list(range(n_slots - 1, -1, -1))   # pop() -> ascending
+
+    # ---------------------------------------------------------------- slots
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int | None:
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        assert slot not in self._free
+        self._free.append(slot)
+
+    # ---------------------------------------------------------------- data
+    def write_prefill_group(self, slots: list[int], k, v,
+                            lengths: list[int]) -> None:
+        """Install a prefilled admission group: k/v [L, B, S_bucket, KV, hd].
+
+        The whole padded bucket is written in ONE donated scatter per
+        buffer (no per-request pool copies).  Rows past each request's
+        prompt length hold pad-token KV but are never visible: attention
+        masks by the slot's pos, and decode overwrites position p before
+        any query attends to it."""
+        assert max(lengths) <= self.max_len
+        w = min(k.shape[2], self.max_len)
+        slots_arr = jnp.asarray(slots)
+        self.k = _install(self.k, k[:, :, :w], slots_arr)
+        self.v = _install(self.v, v[:, :, :w], slots_arr)
+        self.pos = self.pos.at[slots_arr].set(jnp.asarray(lengths, jnp.int32))
+
+    def update(self, caches: dict, active_mask) -> None:
+        """Adopt a decode step's outputs; inactive slots' positions are
+        pinned to 0 so stale counters never walk past max_len."""
+        self.k = caches["k"]
+        self.v = caches["v"]
+        self.pos = jnp.where(active_mask, caches["pos"], 0)

@@ -1,0 +1,244 @@
+"""Continuous-batching serving engine over the model zoo's compressed-weight
+path.
+
+The engine owns a slot-based preallocated KV pool (cache_pool.py) and runs
+iteration-level scheduling: every ``step()`` evicts expired queue entries,
+admits new requests into free slots (bounded prefill work interleaved
+between decode steps), then advances ALL running requests by one token in a
+single slot-indexed decode step.  New requests join the running batch
+without disturbing it — per-row attention/norms are independent and each
+slot carries its own cache position, so a request's tokens are identical
+whether it runs alone or packed next to strangers (tested).
+
+Works unchanged for dense weights or ``SparseWeight`` compressed params
+(models/sparse_serving.py): the weights are just a pytree passed through the
+jitted prefill/decode functions, so the 8:16 (+structured outlier) serving
+path gets continuous batching for free.
+
+Supported families: token-input transformers with [L, B, S, KV, hd] KV
+caches ("dense", "moe").  Recurrent/enc-dec families keep the one-shot path
+in launch/serve.py.
+
+Prefill batching: admitted prompts are padded to power-of-two length buckets
+and grouped, so the number of distinct compiled prefill shapes stays small
+under mixed prompt lengths.  With causal attention the bucket padding
+(after the prompt) cannot influence prompt logits or KV on the single-host
+path this engine runs today — including MoE, whose local routing is
+capacity-free (models/moe.py _moe_local).  A sharded engine on the
+production mesh would route through the capacity-BOUNDED expert-parallel
+path, where pad tokens compete for expert capacity and can perturb real
+tokens; padding must be masked out of routing before that lands (see
+ROADMAP open items).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as tfm
+from .cache_pool import SlotKVPool
+from .request import Request, SamplingParams, Status
+from .sampling import sample_tokens
+from .scheduler import QueueFull, RequestQueue, admission_budget
+
+SUPPORTED_FAMILIES = ("dense", "moe")
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, n_slots: int = 8, max_len: int = 256,
+                 max_queue: int = 64, queue_timeout_s: float | None = None,
+                 max_prefill_per_step: int = 2, clock=time.monotonic):
+        if cfg.family not in SUPPORTED_FAMILIES:
+            raise ValueError(
+                f"ServingEngine supports {SUPPORTED_FAMILIES} families, not "
+                f"{cfg.family!r}; use the one-shot path in launch/serve.py")
+        self.cfg = cfg
+        self.params = params
+        self.pool = SlotKVPool(cfg, n_slots, max_len)
+        self.queue = RequestQueue(max_queue, queue_timeout_s)
+        self.max_prefill_per_step = max_prefill_per_step
+        self.running: dict[int, Request] = {}        # slot -> request
+        self.finished: list[Request] = []
+        self._clock = clock
+        self._next_id = 0
+        self.n_steps = 0
+
+        # per-slot sampling state (host side, fixed shapes)
+        self._temps = np.zeros((n_slots,), np.float32)
+        self._topks = np.zeros((n_slots,), np.int32)
+        self._seeds = np.zeros((n_slots,), np.int32)
+        self._gen_count = np.zeros((n_slots,), np.int32)
+        self._last_token = np.zeros((n_slots,), np.int32)
+        # logits of each slot's most recent position (prefill scatters here
+        # so first-token sampling reuses the one slot-wide sampler)
+        self._slot_logits = jnp.zeros((n_slots, cfg.vocab), jnp.float32)
+
+        self._prefill_fn = jax.jit(
+            lambda p, t: tfm.forward(p, {"tokens": t}, cfg, collect_kv=True))
+        # k/v are donated: the pool adopts the step's output buffers, so the
+        # multi-GB caches update in place instead of being copied every token
+        self._decode_fn = jax.jit(
+            lambda p, k, v, pos, t: tfm.decode_step(
+                p, {"k": k, "v": v, "pos": pos}, {"tokens": t}, cfg),
+            donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------ admission
+    def submit(self, prompt, sampling: SamplingParams | None = None,
+               on_token=None, on_finish=None) -> Request:
+        """Enqueue a request; raises QueueFull when admission control
+        rejects (queue at capacity) and ValueError when the request can
+        never fit a slot."""
+        sampling = sampling or SamplingParams()
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if sampling.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + sampling.max_new_tokens > self.pool.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({sampling.max_new_tokens}) exceeds slot capacity "
+                f"{self.pool.max_len}")
+        req = Request(self._next_id, prompt, sampling,
+                      on_token=on_token, on_finish=on_finish)
+        self._next_id += 1
+        req.metrics.arrival = self._clock()
+        if not self.queue.try_push(req):
+            raise QueueFull(f"queue at capacity ({self.queue.max_size})")
+        return req
+
+    # ------------------------------------------------------------ stepping
+    @property
+    def has_work(self) -> bool:
+        return bool(self.running) or len(self.queue) > 0
+
+    def step(self) -> dict:
+        """One scheduling iteration: evict -> admit/prefill -> decode."""
+        now = self._clock()
+        stats = {"evicted": 0, "admitted": 0, "finished": 0, "decoded": 0}
+
+        for req in self.queue.evict_expired(now):
+            req._finish(Status.EVICTED, now)
+            self.finished.append(req)
+            stats["evicted"] += 1
+
+        budget = admission_budget(len(self.queue), self.pool.n_free,
+                                  len(self.running), self.max_prefill_per_step)
+        if budget:
+            admits = [self.queue.pop() for _ in range(budget)]
+            stats["admitted"] = len(admits)
+            stats["finished"] += self._admit(admits)
+
+        if self.running:
+            stats["decoded"] = len(self.running)
+            stats["finished"] += self._decode_once()
+
+        self.n_steps += 1
+        return stats
+
+    def run(self, max_steps: int | None = None) -> list[Request]:
+        """Step until queue and slots drain; returns finished requests."""
+        steps = 0
+        while self.has_work and (max_steps is None or steps < max_steps):
+            self.step()
+            steps += 1
+        return self.finished
+
+    # ------------------------------------------------------------ internals
+    def _admit(self, reqs: list[Request]) -> int:
+        """Prefill ``reqs`` (grouped by padded-length bucket, chunked to a
+        fixed batch of max_prefill_per_step rows so each bucket compiles
+        exactly one prefill shape), install their KV into slots, and emit
+        each request's first token.  Returns the number of requests that
+        finished immediately (max_new_tokens == 1 or instant EOS)."""
+        by_bucket: dict[int, list[Request]] = {}
+        for r in reqs:
+            by_bucket.setdefault(_bucket(r.prompt_len), []).append(r)
+
+        n_finished = 0
+        chunk = max(self.max_prefill_per_step, 1)
+        for bucket, bucket_group in sorted(by_bucket.items()):
+            for start in range(0, len(bucket_group), chunk):
+                group = bucket_group[start:start + chunk]
+                n_finished += self._prefill_group(group, bucket, chunk)
+        return n_finished
+
+    def _prefill_group(self, group: list[Request], bucket: int,
+                       batch_pad: int) -> int:
+        B = max(len(group), batch_pad)
+        tokens = np.zeros((B, bucket), np.int32)
+        for i, r in enumerate(group):
+            tokens[i, :r.prompt_len] = r.prompt
+        logits, (k, v) = self._prefill_fn(self.params, jnp.asarray(tokens))
+
+        now = self._clock()
+        slots = []
+        for r in group:
+            slot = self.pool.alloc()
+            assert slot is not None, "scheduler admitted past free slots"
+            r.slot = slot
+            r.status = Status.RUNNING
+            r.metrics.admitted = now
+            self.running[slot] = r
+            self._temps[slot] = r.sampling.temperature
+            self._topks[slot] = r.sampling.top_k
+            self._seeds[slot] = r.sampling.seed
+            self._gen_count[slot] = 0
+            slots.append(slot)
+        n = len(group)                      # real rows; the rest is batch pad
+        self.pool.write_prefill_group(slots, k[:, :n], v[:, :n],
+                                      [r.prompt_len for r in group])
+
+        lens = np.array([r.prompt_len for r in group]) - 1
+        last_logits = logits[jnp.arange(n), jnp.asarray(lens)]
+        self._slot_logits = self._slot_logits.at[jnp.asarray(slots)].set(
+            last_logits.astype(jnp.float32))
+        return self._emit_tokens(slots)
+
+    def _decode_once(self) -> int:
+        """Advance every running slot one token in a single fused step."""
+        active = sorted(self.running)
+        tokens = jnp.asarray(self._last_token[:, None])
+        logits, caches = self._decode_fn(self.params, self.pool.k, self.pool.v,
+                                         self.pool.pos, tokens)
+        self._slot_logits = logits.astype(jnp.float32)
+        n_finished = self._emit_tokens(active)
+        still = np.zeros((self.pool.n_slots,), bool)
+        still[sorted(self.running)] = True
+        self.pool.update(caches, jnp.asarray(still))
+        return n_finished
+
+    def _emit_tokens(self, slots: list[int]) -> int:
+        """Sample one token for ``slots`` from _slot_logits, stream it, and
+        retire requests that hit max_new_tokens / EOS.  Returns retirements."""
+        toks = np.asarray(sample_tokens(
+            self._slot_logits, jnp.asarray(self._temps),
+            jnp.asarray(self._topks), jnp.asarray(self._seeds),
+            jnp.asarray(self._gen_count)))
+        now = self._clock()
+        n_finished = 0
+        for slot in slots:
+            req = self.running[slot]
+            tok = int(toks[slot])
+            req._emit(tok, now)
+            self._last_token[slot] = tok
+            self._gen_count[slot] += 1
+            sp = req.sampling
+            if (len(req.tokens) >= sp.max_new_tokens
+                    or (sp.eos_id is not None and tok == sp.eos_id)):
+                req._finish(Status.FINISHED, now)
+                self.finished.append(req)
+                del self.running[slot]
+                self.pool.free(slot)
+                n_finished += 1
+        return n_finished

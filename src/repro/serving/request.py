@@ -1,0 +1,75 @@
+"""Request objects for the continuous-batching serving engine.
+
+A ``Request`` carries the prompt, per-request sampling parameters, and
+optional streaming callbacks; the engine mutates its lifecycle state
+(status, generated tokens, metrics timestamps) as it moves through
+queue -> slot -> finished.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Sequence
+
+from ..runtime.metrics import RequestMetrics
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+    EVICTED = "evicted"                # timed out in queue / preempted
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    ``temperature <= 0`` is greedy argmax (the default — matches the one-shot
+    serve loop token-for-token); otherwise softmax sampling at the given
+    temperature, optionally restricted to the ``top_k`` highest logits.
+    """
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0                     # 0 = no top-k restriction
+    seed: int = 0
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: Sequence[int]              # token ids
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    # streaming hooks: on_token(request, token_id) per generated token,
+    # on_finish(request) once the request leaves the engine (any status)
+    on_token: Callable | None = None
+    on_finish: Callable | None = None
+
+    # engine-managed state
+    status: Status = Status.QUEUED
+    slot: int | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.status in (Status.FINISHED, Status.EVICTED)
+
+    def _emit(self, token: int, now: float) -> None:
+        if not self.tokens:
+            self.metrics.first_token = now
+        self.tokens.append(token)
+        self.metrics.n_tokens = len(self.tokens)
+        if self.on_token is not None:
+            self.on_token(self, token)
+
+    def _finish(self, status: Status, now: float) -> None:
+        self.status = status
+        self.metrics.finished = now
+        if self.on_finish is not None:
+            self.on_finish(self)

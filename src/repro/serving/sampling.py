@@ -1,0 +1,34 @@
+"""Vectorized per-slot token sampling.
+
+One jitted function over the whole slot batch: greedy rows (temperature<=0)
+take argmax — bit-identical to the one-shot serve loop — while stochastic
+rows apply temperature + optional top-k restriction and draw categorically.
+Each row's PRNG key is derived in-graph from its request seed and token
+index (fold_in), so the host only ships small int/float vectors per step.
+Inactive slots ride along (their outputs are discarded by the engine),
+keeping shapes static so nothing retraces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _sample_row(logits, temperature, top_k, seed, step):
+    """logits [V]; returns a sampled token id (scalar int32)."""
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    # top-k: drop everything below the k-th largest logit (k==0 keeps all)
+    v = logits.shape[-1]
+    kth_idx = jnp.clip(top_k - 1, 0, v - 1)
+    kth_val = jnp.sort(lf)[::-1][kth_idx]
+    restricted = jnp.where((top_k > 0) & (lf < kth_val), -jnp.inf, lf)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    drawn = jax.random.categorical(key, restricted).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, drawn)
+
+
+@jax.jit
+def sample_tokens(logits, temperatures, top_ks, seeds, steps):
+    """logits [B, V]; per-row temperature/top_k/seed/token-index -> [B]."""
+    return jax.vmap(_sample_row)(logits, temperatures, top_ks, seeds, steps)

@@ -1,0 +1,65 @@
+"""Request queue (admission/eviction) and prefill/decode interleaving policy.
+
+Admission control is two-level: ``submit`` rejects outright when the queue is
+at capacity or the request can never fit a slot (prompt + max_new_tokens >
+slot capacity); queued requests past ``queue_timeout_s`` are evicted at the
+head of every engine step, bounding worst-case queue wait.
+
+The interleave policy bounds how many prefills run between consecutive
+decode steps (``max_prefill_per_step``), so a burst of arrivals cannot
+starve in-flight decodes — the classic continuous-batching latency/
+throughput trade (Orca / vLLM-style iteration-level scheduling).  When
+nothing is decoding, the bound is lifted: prefill-only work fills all free
+slots at once.
+"""
+from __future__ import annotations
+
+import collections
+
+from .request import Request, Status
+
+
+class QueueFull(RuntimeError):
+    """Raised by ServingEngine.submit when admission control rejects."""
+
+
+class RequestQueue:
+    def __init__(self, max_size: int = 64, queue_timeout_s: float | None = None):
+        self.max_size = max_size
+        self.queue_timeout_s = queue_timeout_s
+        self._q: collections.deque[Request] = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def try_push(self, req: Request) -> bool:
+        if len(self._q) >= self.max_size:
+            return False
+        self._q.append(req)
+        return True
+
+    def pop(self) -> Request | None:
+        return self._q.popleft() if self._q else None
+
+    def evict_expired(self, now: float) -> list[Request]:
+        """Drop queued requests older than queue_timeout_s (FIFO order)."""
+        if self.queue_timeout_s is None:
+            return []
+        evicted = []
+        kept = collections.deque()
+        for req in self._q:
+            if now - req.metrics.arrival > self.queue_timeout_s:
+                evicted.append(req)
+            else:
+                kept.append(req)
+        self._q = kept
+        return evicted
+
+
+def admission_budget(n_queued: int, n_free_slots: int, n_running: int,
+                     max_prefill_per_step: int) -> int:
+    """How many requests to prefill before the next decode step."""
+    budget = min(n_queued, n_free_slots)
+    if n_running > 0:
+        budget = min(budget, max_prefill_per_step)
+    return budget

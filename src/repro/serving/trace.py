@@ -1,0 +1,98 @@
+"""Request traces: synthetic Poisson workloads, JSON round-trip, and replay.
+
+A trace is a list of ``TraceRequest`` — arrival offset (seconds from trace
+start), prompt, and sampling params.  ``replay`` drives a ServingEngine
+against wall-clock arrivals (scaled by ``time_scale``): requests are
+submitted once their arrival time passes, the engine steps whenever it has
+work, and the loop exits when everything drains.  Used by both the
+``--trace`` mode of launch/serve.py and benchmarks/serving_bench.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from .request import SamplingParams
+from .scheduler import QueueFull
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    arrival_s: float                   # offset from trace start
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def sampling(self) -> SamplingParams:
+        return SamplingParams(max_new_tokens=self.max_new_tokens,
+                              temperature=self.temperature,
+                              top_k=self.top_k, seed=self.seed)
+
+
+def poisson_trace(*, n_requests: int, rate_per_s: float, vocab: int,
+                  prompt_len: tuple[int, int] = (8, 32),
+                  max_new_tokens: int = 16, temperature: float = 0.0,
+                  seed: int = 0) -> list[TraceRequest]:
+    """Synthetic open-loop workload: exponential interarrival gaps at
+    ``rate_per_s``, prompt lengths uniform over [lo, hi], random token ids."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_per_s))
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        prompt = rng.integers(0, vocab, size=plen).tolist()
+        out.append(TraceRequest(arrival_s=t, prompt=prompt,
+                                max_new_tokens=max_new_tokens,
+                                temperature=temperature, seed=i))
+    return out
+
+
+def save_trace(path: str, trace: list[TraceRequest]) -> None:
+    with open(path, "w") as f:
+        json.dump([dataclasses.asdict(t) for t in trace], f)
+
+
+def load_trace(path: str) -> list[TraceRequest]:
+    with open(path) as f:
+        return [TraceRequest(**d) for d in json.load(f)]
+
+
+def replay(engine, trace: list[TraceRequest], *, time_scale: float = 1.0,
+           verbose: bool = False) -> dict:
+    """Feed ``trace`` into ``engine`` against the wall clock.
+
+    ``time_scale`` compresses (<1) or stretches (>1) arrival gaps.  Requests
+    rejected by admission control are recorded, not retried (open-loop
+    workload).  Returns {"finished": [...], "rejected": n, "wall_s": s}.
+    """
+    pending = sorted(trace, key=lambda t: t.arrival_s)
+    t0 = time.monotonic()
+    rejected = 0
+    i = 0
+    while i < len(pending) or engine.has_work:
+        now = time.monotonic() - t0
+        while i < len(pending) and pending[i].arrival_s * time_scale <= now:
+            tr = pending[i]
+            i += 1
+            try:
+                engine.submit(tr.prompt, tr.sampling())
+            except (QueueFull, ValueError) as e:
+                # queue at capacity, or the request can never fit a slot —
+                # open-loop workload: count it rejected, keep replaying
+                rejected += 1
+                if verbose:
+                    print(f"rejected request {i - 1}: {e}")
+        if engine.has_work:
+            engine.step()
+        elif i < len(pending):
+            # idle until the next arrival is due
+            next_due = pending[i].arrival_s * time_scale
+            time.sleep(min(max(next_due - (time.monotonic() - t0), 0.0), 0.05))
+    wall_s = time.monotonic() - t0
+    return {"finished": engine.finished, "rejected": rejected, "wall_s": wall_s}

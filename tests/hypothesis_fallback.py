@@ -1,0 +1,62 @@
+"""Deterministic stand-in for the tiny ``hypothesis`` subset these tests use.
+
+When ``hypothesis`` is installed the test modules import it directly; when it
+is missing they fall back to this module, which replays each property test as
+a seeded deterministic parameter sweep (``max_examples`` draws from
+``random.Random(0)``).  Only what the suite needs is implemented:
+
+  @settings(max_examples=N, deadline=None)
+  @given(st.integers(a, b), ...)      # strategies support .map(f)
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw              # callable(rng) -> value
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+st = types.SimpleNamespace(integers=_integers)
+strategies = st
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = [s._draw(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (it introspects the signature; ``seed`` etc. would
+        # otherwise be looked up as fixtures)
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[:-len(strats)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco

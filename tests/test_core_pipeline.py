@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # deterministic seeded sweep fallback
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import (ActStats, score, ria_score, smoothquant_scales,
                         equalize_weights, equalized_view_for_scoring,

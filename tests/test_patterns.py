@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # deterministic seeded sweep fallback
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import (Pattern, nm_mask, topn_block_mask, validate_nm_mask,
                         block_topn_indices, mask_sparsity, WEIGHT_PATTERNS,
