@@ -1,10 +1,21 @@
 """Serving benchmark: continuous batching under Poisson arrivals,
-dense vs 8:16(+16:256 outlier) compressed weights.
+dense vs 8:16(+16:256 outlier) compressed weights, slot vs paged KV.
 
-Generates an open-loop synthetic workload (exponential interarrival gaps),
-replays it through the ServingEngine for both weight formats, and reports
-throughput (generated tok/s) plus p50/p99 of time-to-first-token, per-token
-latency, and end-to-end request latency.
+Two scenarios:
+
+1. Poisson open-loop workload (exponential interarrival gaps) replayed
+   through the ServingEngine for each (weights, kv_layout) combination;
+   reports throughput (generated tok/s) plus p50/p99 of time-to-first-
+   token, per-token latency, and end-to-end request latency.
+2. Shared-system-prompt burst under an EQUAL KV-memory budget: every
+   request is one long shared prefix plus a short unique tail.  The slot
+   layout must reserve max_len per request, capping concurrency at
+   budget/max_len; the paged layout allocates blocks on demand and
+   stores the shared prefix KV once (prefix cache), so it admits more
+   concurrent requests and skips most prefill work (lower TTFT).
+
+Every run also lands in a machine-readable ``BENCH_serving.json``
+(--out) so the perf trajectory is tracked across PRs.
 
 CPU smoke:   python benchmarks/serving_bench.py --smoke
 Full-ish:    python benchmarks/serving_bench.py --requests 64 --rate 4 \
@@ -14,7 +25,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import sys
+import time
 
 import jax
 
@@ -25,7 +38,8 @@ from repro.core import SparsifyConfig                          # noqa: E402
 from repro.models import get_model                             # noqa: E402
 from repro.models.sparse_serving import sparsify_for_serving   # noqa: E402
 from repro.runtime.metrics import format_summary, summarize    # noqa: E402
-from repro.serving import ServingEngine, poisson_trace, replay  # noqa: E402
+from repro.serving import (QueueFull, ServingEngine,           # noqa: E402
+                           TraceRequest, poisson_trace, replay)
 
 
 def bench_cfg(args):
@@ -36,30 +50,88 @@ def bench_cfg(args):
     return cfg
 
 
-def run_one(name: str, cfg, params, trace, args) -> dict:
-    engine = ServingEngine(cfg, params, n_slots=args.slots,
-                           max_len=args.max_len, max_queue=args.max_queue,
-                           max_prefill_per_step=args.max_prefill_per_step)
-    # Warm every shape the replay will hit outside the timed window: the
-    # engine pads prefill batches to a fixed size per power-of-two bucket,
-    # so one request per distinct bucket covers all prefill compiles, and
-    # any request covers the (fixed-shape) decode/sampler compiles.
-    from repro.serving.engine import _bucket
-    warm_buckets = {}
-    for t in trace:
-        warm_buckets.setdefault(_bucket(len(t.prompt)), t)
-    for t in warm_buckets.values():
-        engine.submit(t.prompt, t.sampling())
-    engine.run()
-    engine.finished.clear()
+def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
+                  max_len=None, n_blocks=None):
+    return ServingEngine(
+        cfg, params, n_slots=n_slots or args.slots,
+        max_len=max_len or args.max_len, max_queue=args.max_queue,
+        max_prefill_per_step=args.max_prefill_per_step,
+        kv_layout=kv_layout, block_size=args.block_size, n_blocks=n_blocks)
 
-    res = replay(engine, trace, time_scale=args.time_scale)
+
+def _warm_and_replay(engine, trace, time_scale) -> dict:
+    """Replay untimed (compiles every prefill/decode shape the trace
+    hits), then replay timed.  The paged engine is warmed twice: the
+    first pass fills the prefix cache, the second compiles the
+    suffix-prefill shapes that cache hits route through — the timed pass
+    then measures prefix-cache steady state."""
+    warm_passes = 2 if engine.kv_layout == "paged" else 1
+    for _ in range(warm_passes):
+        for t in trace:
+            while True:                # drain when the queue fills up
+                try:
+                    engine.submit(t.prompt, t.sampling())
+                    break
+                except QueueFull:
+                    engine.step()
+        engine.run()
+    engine.finished.clear()
+    engine.reset_stats()               # measure only the timed window
+
+    res = replay(engine, trace, time_scale=time_scale)
     summary = summarize([r.metrics for r in res["finished"]], res["wall_s"])
     summary["rejected"] = res["rejected"]
-    print(format_summary(name, summary))
-    if res["rejected"]:
-        print(f"{'':>10}{res['rejected']} rejected by admission control")
+    summary.update(engine.stats())
     return summary
+
+
+def run_one(name: str, cfg, params, trace, args, kv_layout) -> dict:
+    engine = _build_engine(cfg, params, args, kv_layout)
+    summary = _warm_and_replay(engine, trace, args.time_scale)
+    print(format_summary(name, summary))
+    if summary["rejected"]:
+        print(f"{'':>10}{summary['rejected']} rejected by admission control")
+    return summary
+
+
+def shared_prefix_scenario(cfg, params, args) -> dict:
+    """Long shared system prompt + unique tails, arriving as one burst,
+    slot vs paged under the same KV-memory budget (in cache tokens)."""
+    import numpy as np
+    rng = np.random.default_rng(args.seed + 1)
+    sys_prompt = rng.integers(0, cfg.vocab, size=args.sys_len).tolist()
+    n = args.shared_requests
+    trace = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab, size=args.tail_len).tolist()
+        trace.append(TraceRequest(arrival_s=0.001 * i,
+                                  prompt=sys_prompt + tail,
+                                  max_new_tokens=args.gen, seed=i))
+    max_len = args.sys_len + args.tail_len + args.gen
+    budget_tokens = args.kv_budget_tokens or args.slots * args.max_len
+    slot_slots = max(budget_tokens // max_len, 1)
+    paged_blocks = budget_tokens // args.block_size
+    paged_rows = min(n, args.slots * 4)
+
+    out = {"kv_budget_tokens": budget_tokens, "n_requests": n,
+           "sys_len": args.sys_len, "tail_len": args.tail_len,
+           "gen": args.gen}
+    for layout, kw in (("slot", dict(n_slots=slot_slots, max_len=max_len)),
+                       ("paged", dict(n_slots=paged_rows, max_len=max_len,
+                                      n_blocks=paged_blocks))):
+        engine = _build_engine(cfg, params, args, layout, **kw)
+        summary = _warm_and_replay(engine, trace, args.time_scale)
+        print(format_summary(f"sys/{layout}", summary))
+        out[layout] = summary
+
+    s, p = out["slot"], out["paged"]
+    hits = p.get("pool", {}).get("prefix_cache", {}).get("hit_tokens", 0)
+    print(f"shared-prefix @ {budget_tokens}-token KV budget: "
+          f"max concurrent slot={s['max_running']} vs paged={p['max_running']}; "
+          f"prefix-cache hit tokens={hits}; "
+          f"ttft p50 slot={s['ttft']['p50']*1e3:.0f}ms vs "
+          f"paged={p['ttft']['p50']*1e3:.0f}ms")
+    return out
 
 
 def main(argv=None):
@@ -78,9 +150,23 @@ def main(argv=None):
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--max-prefill-per-step", type=int, default=2)
     ap.add_argument("--time-scale", type=float, default=1.0)
+    ap.add_argument("--kv-layout", default="both",
+                    choices=("slot", "paged", "both"))
+    ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--weight-pattern", default="8:16")
     ap.add_argument("--outlier-pattern", default="16:256")
     ap.add_argument("--seed", type=int, default=0)
+    # shared-system-prompt scenario
+    ap.add_argument("--no-shared-prefix", action="store_true",
+                    help="skip the shared-system-prompt scenario")
+    ap.add_argument("--shared-requests", type=int, default=16)
+    ap.add_argument("--sys-len", type=int, default=96)
+    ap.add_argument("--tail-len", type=int, default=16)
+    ap.add_argument("--kv-budget-tokens", type=int, default=None,
+                    help="KV budget for the shared-prefix comparison "
+                         "(default: slots * max_len)")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="machine-readable results file ('' to skip)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.requests = min(args.requests, 10)
@@ -88,6 +174,10 @@ def main(argv=None):
         args.gen = min(args.gen, 8)
         args.slots = min(args.slots, 4)
         args.max_len = min(args.max_len, 64)
+        args.block_size = min(args.block_size, 8)
+        args.shared_requests = min(args.shared_requests, 10)
+        args.sys_len = min(args.sys_len, 40)
+        args.tail_len = min(args.tail_len, 8)
 
     cfg = bench_cfg(args)
     zoo = get_model(cfg)
@@ -97,11 +187,16 @@ def main(argv=None):
                           vocab=cfg.vocab,
                           prompt_len=(args.prompt_min, args.prompt_max),
                           max_new_tokens=args.gen, seed=args.seed)
+    layouts = (("slot", "paged") if args.kv_layout == "both"
+               else (args.kv_layout,))
     print(f"model {cfg.name} ({cfg.family}), {args.requests} requests @ "
           f"{args.rate}/s Poisson, prompts {args.prompt_min}-{args.prompt_max}, "
-          f"gen {args.gen}, {args.slots} slots")
+          f"gen {args.gen}, {args.slots} slots, layouts {layouts}")
 
-    results = {"dense": run_one("dense", cfg, params, trace, args)}
+    results = {}
+    for layout in layouts:
+        results[f"dense/{layout}"] = run_one(f"dense/{layout}", cfg, params,
+                                             trace, args, layout)
 
     scfg = SparsifyConfig(weight_pattern=args.weight_pattern,
                           outlier_pattern=args.outlier_pattern,
@@ -109,11 +204,36 @@ def main(argv=None):
     sparams, report = sparsify_for_serving(params, scfg)
     print(f"  sparse deploy: {report['n_layers_sparsified']} matrices, "
           f"{report['ratio']:.3f}x bytes")
-    results["sparse"] = run_one("sparse", cfg, sparams, trace, args)
+    for layout in layouts:
+        results[f"sparse/{layout}"] = run_one(f"sparse/{layout}", cfg,
+                                              sparams, trace, args, layout)
 
-    d, s = results["dense"], results["sparse"]
-    if d["tok_per_s"] > 0:
+    d = results.get("dense/slot") or results.get(f"dense/{layouts[0]}")
+    s = results.get("sparse/slot") or results.get(f"sparse/{layouts[0]}")
+    if d and s and d["tok_per_s"] > 0:
         print(f"sparse/dense throughput: {s['tok_per_s']/d['tok_per_s']:.2f}x")
+
+    shared = None
+    if not args.no_shared_prefix:
+        shared = shared_prefix_scenario(cfg, params, args)
+
+    if args.out:
+        payload = {
+            "meta": {"model": cfg.name, "family": cfg.family,
+                     "smoke": args.smoke, "requests": args.requests,
+                     "rate_per_s": args.rate, "gen": args.gen,
+                     "slots": args.slots, "max_len": args.max_len,
+                     "block_size": args.block_size,
+                     "weight_pattern": args.weight_pattern,
+                     "outlier_pattern": args.outlier_pattern,
+                     "seed": args.seed, "timestamp": time.time(),
+                     "backend": jax.default_backend()},
+            "poisson": results,
+            "shared_prefix": shared,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
     return results
 
 

@@ -6,13 +6,18 @@ by their 8:16 (+N:256 outlier) compressed form at load time
 weights, on CPU the reference decompress path runs (same numerics).
 
 Modes:
-  default      continuous-batching engine (serving/): slot-based KV pool,
+  default      continuous-batching engine (serving/): preallocated KV pool,
                interleaved prefill/decode, per-request sampling.  Token-
                identical to the legacy loop under greedy decoding.
   --legacy     one-shot lock-step prefill+decode loop; works for every model
                family (ssm / hybrid / encdec / vlm included).
   --trace F    replay a JSON request trace (serving/trace.py) through the
                engine and report tok/s + latency percentiles.
+
+``--kv-layout paged`` swaps the per-request max_len reservation for the
+paged block pool (serving/paged/): block-granular allocation, prefix-cache
+sharing of identical prompt prefixes, preempt-to-queue under KV pressure.
+Token-identical to ``--kv-layout slot`` for the same requests and seeds.
 
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch llama-paper-smoke \
@@ -85,13 +90,20 @@ def run_oneshot(cfg, zoo, params, key, args):
     return gen
 
 
+def _engine_kwargs(args) -> dict:
+    return dict(n_slots=args.slots, max_queue=args.max_queue,
+                max_prefill_per_step=args.max_prefill_per_step,
+                kv_layout=args.kv_layout, block_size=args.block_size,
+                n_blocks=args.n_blocks,
+                prefix_caching=not args.no_prefix_cache)
+
+
 def run_engine(cfg, params, key, args):
     """Continuous-batching engine on a batch of random prompts."""
     from ..serving import SamplingParams, ServingEngine
-    engine = ServingEngine(cfg, params, n_slots=args.slots,
+    engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen,
-                           max_queue=args.max_queue,
-                           max_prefill_per_step=args.max_prefill_per_step)
+                           **_engine_kwargs(args))
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
     sp = SamplingParams(max_new_tokens=args.gen,
                         temperature=args.temperature, top_k=args.top_k)
@@ -100,9 +112,11 @@ def run_engine(cfg, params, key, args):
     engine.run()
     wall = time.time() - t0
     n_tok = sum(len(r.tokens) for r in reqs)
-    print(f"engine: {args.batch} requests, {n_tok} tokens in {wall:.2f}s "
-          f"({n_tok/max(wall,1e-9):.1f} tok/s, {engine.n_steps} steps, "
-          f"{args.slots} slots)")
+    print(f"engine[{args.kv_layout}]: {args.batch} requests, {n_tok} tokens "
+          f"in {wall:.2f}s ({n_tok/max(wall,1e-9):.1f} tok/s, "
+          f"{engine.n_steps} steps, {args.slots} slots)")
+    if args.kv_layout == "paged":
+        print(f"  paged: {engine.stats()['pool']}")
     return jnp.asarray([r.tokens for r in reqs], jnp.int32)
 
 
@@ -110,10 +124,8 @@ def run_trace(cfg, params, args):
     """Replay a recorded request trace through the engine."""
     from ..runtime.metrics import format_summary, summarize
     from ..serving import ServingEngine, load_trace, replay
-    engine = ServingEngine(cfg, params, n_slots=args.slots,
-                           max_len=args.max_len,
-                           max_queue=args.max_queue,
-                           max_prefill_per_step=args.max_prefill_per_step)
+    engine = ServingEngine(cfg, params, max_len=args.max_len,
+                           **_engine_kwargs(args))
     trace = load_trace(args.trace)
     res = replay(engine, trace, time_scale=args.time_scale)
     summary = summarize([r.metrics for r in res["finished"]], res["wall_s"])
@@ -139,6 +151,15 @@ def main(argv=None):
                     help="one-shot lock-step loop instead of the engine")
     ap.add_argument("--slots", type=int, default=8,
                     help="engine KV-pool slots (concurrent requests)")
+    ap.add_argument("--kv-layout", default="slot", choices=("slot", "paged"),
+                    help="contiguous per-slot KV vs paged block pool")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged layout)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="paged arena size in blocks (default: the same "
+                         "HBM as the slot layout would reserve)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix-cache block sharing (paged)")
     ap.add_argument("--max-prefill-per-step", type=int, default=2)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)

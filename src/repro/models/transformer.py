@@ -103,8 +103,13 @@ def _mlp(lp, x, cfg):
     return linear(lp["w_down"], hidden)
 
 
-def block_forward(lp, x, positions, cfg, q_chunks: int = 1, causal: bool = True):
+def block_forward(lp, x, positions, cfg, q_chunks: int = 1, causal: bool = True,
+                  prior_kv=None):
     """Full-sequence block (train / prefill). Returns (y, (k, v)).
+
+    ``prior_kv`` = (k, v) [B, P, KV, hd] of an already-computed context
+    (paged prefix-cache hit): queries attend to prior + fresh keys with a
+    ``q_offset`` of P, and only the fresh suffix KV is returned.
 
     Activation constraints pin the batch (fsdp) sharding at block boundaries —
     without them GSPMD can flip to a d_model-sharded/batch-replicated layout
@@ -114,7 +119,15 @@ def block_forward(lp, x, positions, cfg, q_chunks: int = 1, causal: bool = True)
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
     q, k, v = _project_qkv(lp, h, cfg, positions)
     q = pol.shard(q, ("fsdp", None, "model", None))
-    attn = sdpa(q, k, v, causal=causal, window=cfg.window, q_chunks=q_chunks)
+    if prior_kv is not None:
+        pk, pv = prior_kv
+        k_all = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        attn = sdpa(q, k_all, v_all, causal=causal, window=cfg.window,
+                    q_chunks=q_chunks, q_offset=pk.shape[1])
+    else:
+        attn = sdpa(q, k, v, causal=causal, window=cfg.window,
+                    q_chunks=q_chunks)
     x = x + linear(lp["wo"], attn.reshape(*attn.shape[:2], -1))
     x = pol.shard(x, ("fsdp", None, None))
     h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
@@ -160,6 +173,44 @@ def block_decode(lp, x, k_cache, v_cache, pos, cfg):
     h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
     x = x + _mlp(lp, h, cfg)
     return x, k_cache, v_cache
+
+
+def block_decode_paged(lp, x, k_arena, v_arena, block_tables, pos, cfg,
+                       attn_backend=None):
+    """One-token block over a paged KV arena. x: [B,1,d]; arenas
+    [n_blocks, block_size, KV, hd]; ``block_tables`` [B, nb] maps each
+    row's sequence position p to physical block ``bt[b, p // bs]``;
+    ``pos`` [B] is each row's filled length (= write position).
+
+    The fresh k/v is scattered into each row's current block, then
+    attention gathers over the row's block list (serving/paged/
+    paged_attention.py) instead of a contiguous slot."""
+    from ..parallel import policy as pol
+    from ..serving.paged.paged_attention import paged_attention
+    B = x.shape[0]
+    n_blocks, bs = k_arena.shape[0], k_arena.shape[1]
+    x = pol.shard(x, ("fsdp", None, None))
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    base = pos[:, None]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(base[None], (3, B, 1))
+    else:
+        positions = base
+    q, k, v = _project_qkv(lp, h, cfg, positions)
+    # write: flat token slot of position p is bt[b, p // bs] * bs + p % bs
+    slot = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
+                               axis=1)[:, 0] * bs + pos % bs       # [B]
+    flat_shape = (n_blocks * bs, *k_arena.shape[2:])
+    k_arena = k_arena.reshape(flat_shape).at[slot].set(
+        k[:, 0].astype(k_arena.dtype)).reshape(k_arena.shape)
+    v_arena = v_arena.reshape(flat_shape).at[slot].set(
+        v[:, 0].astype(v_arena.dtype)).reshape(v_arena.shape)
+    attn = paged_attention(q, k_arena, v_arena, block_tables, pos + 1,
+                           window=cfg.window, backend=attn_backend)
+    x = x + linear(lp["wo"], attn.reshape(B, 1, -1))
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + _mlp(lp, h, cfg)
+    return x, k_arena, v_arena
 
 
 def _windowed_decode(q, k_cache, v_cache, cache_len, valid_from):
@@ -313,3 +364,66 @@ def decode_step(params, caches, batch, cfg, unroll: bool = False):
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = linear(head, x)[:, 0]                        # [B, V]
     return logits, {"k": new_k, "v": new_v, "pos": pos + 1}
+
+
+def forward_with_prefix(params, batch, cfg, prefix_k, prefix_v):
+    """Suffix prefill against cached context (paged prefix-cache hit).
+
+    ``batch["tokens"]`` [B, S] are the UNCACHED suffix tokens of each
+    prompt; ``prefix_k/v`` [L, B, P, KV, hd] is the shared-prefix KV
+    gathered from the paged arena.  RoPE positions and the causal mask
+    are offset by P, so suffix token i sits at absolute position P + i
+    and attends to the whole prefix plus its own causal context —
+    numerically the same as prefilling the full prompt, minus the
+    FLOPs/HBM for the P cached positions.
+
+    Returns (logits [B, S, V], (k, v) suffix caches [L, B, S, KV, hd]).
+    """
+    from ..parallel import policy as pol
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    P = prefix_k.shape[2]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(P + jnp.arange(S)[None], (B, S))
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, B, S))
+    x = pol.shard(x, ("fsdp", None, None))
+
+    def body(h, xs):
+        lp, pk, pv = xs
+        h, kv = block_forward(lp, h, positions, cfg, prior_kv=(pk, pv))
+        return h, kv
+    x, (k, v) = jax.lax.scan(body, x, (params["layers"], prefix_k, prefix_v))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = pol.shard(linear(head, x), ("fsdp", None, "model"))
+    return logits, (k, v)
+
+
+def decode_step_paged(params, caches, batch, cfg, attn_backend=None):
+    """One new token for every row over the paged arena.
+
+    caches: {"k"/"v": [L, n_blocks, block_size, KV, hd] arenas,
+    "block_tables": [B, nb] int32, "pos": [B] filled lengths}.  Mirrors
+    ``decode_step`` but consumes block tables instead of per-slot
+    contiguous buffers; rows at different sequence positions (and with
+    non-contiguous physical blocks) advance in one fused step.
+    """
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)        # [B,1,d]
+    bt, pos = caches["block_tables"], caches["pos"]
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h, kc, vc = block_decode_paged(lp, h, kc, vc, bt, pos, cfg,
+                                       attn_backend=attn_backend)
+        return h, (kc, vc)
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], caches["k"], caches["v"]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = linear(head, x)[:, 0]                        # [B, V]
+    return logits, {"k": new_k, "v": new_v, "block_tables": bt,
+                    "pos": pos + 1}

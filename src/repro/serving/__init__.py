@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine (slot-based KV pool, interleaved
+"""Continuous-batching serving engine (preallocated KV pools, interleaved
 prefill/decode scheduling, per-request sampling + streaming callbacks).
 
   engine = ServingEngine(cfg, params, n_slots=8, max_len=256)
@@ -6,12 +6,18 @@ prefill/decode scheduling, per-request sampling + streaming callbacks).
   engine.run()            # or engine.step() under an external loop
   req.tokens              # generated ids; req.metrics has ttft/e2e/...
 
+``kv_layout="slot"`` reserves a contiguous max_len KV region per request;
+``kv_layout="paged"`` allocates block_size-token blocks on demand with
+prefix sharing and preempt-to-queue under memory pressure (serving/paged/).
+
 Dense params and SparseWeight compressed params (the paper's 8:16 +
 structured-outlier deployment) are served by the same engine.
 """
 
-from .cache_pool import SlotKVPool
-from .engine import ServingEngine, SUPPORTED_FAMILIES
+from .cache_pool import (CachePoolError, CapacityError, DoubleFree,
+                         KVCachePool, SlotKVPool)
+from .engine import KV_LAYOUTS, ServingEngine, SUPPORTED_FAMILIES
+from .paged import OutOfBlocks, PagedKVPool
 from .request import Request, SamplingParams, Status
 from .scheduler import QueueFull, RequestQueue
 from .trace import (TraceRequest, load_trace, poisson_trace, replay,

@@ -1,23 +1,64 @@
-"""Slot-based preallocated KV-cache pool.
+"""KV cache pools: the slot layout, and the protocol both layouts satisfy.
 
-One allocation at engine start: k/v buffers [L, n_slots, max_len, KV, hd]
-plus a per-slot filled-position vector [n_slots].  Requests are assigned a
-slot for their lifetime; prefill KV is written left-aligned into the slot,
-decode steps write at each slot's own position (models/transformer.py
-slot-indexed decode).  This replaces the old serve-loop pattern of growing
-per-batch caches with ``jnp.pad`` — buffer shapes never change, so the
-decode step compiles exactly once.
+``SlotKVPool`` is the original contiguous layout: one allocation at engine
+start of k/v buffers [L, n_slots, max_len, KV, hd] plus a per-slot
+filled-position vector [n_slots].  Requests are assigned a slot for their
+lifetime; prefill KV is written left-aligned into the slot, decode steps
+write at each slot's own position (models/transformer.py slot-indexed
+decode).  Buffer shapes never change, so the decode step compiles exactly
+once — at the cost of reserving ``max_len`` tokens of HBM per slot whether
+a request uses them or not.  ``serving/paged/`` removes that reservation.
 
 Freed slots are immediately reusable: every KV position a new request's
 attention can see ([0, pos)) is freshly written by its own prefill/decode
-before it becomes visible, so no zeroing pass is needed on free.
+before it becomes visible, so no zeroing pass is needed on release.
+
+Invariant violations raise ``CachePoolError`` subclasses — real
+exceptions, not ``assert``, so the checks survive ``python -O``.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+
+
+class CachePoolError(RuntimeError):
+    """Cache-pool invariant violation (these indicate engine bugs, not
+    workload conditions — workload pressure raises QueueFull/OutOfBlocks)."""
+
+
+class DoubleFree(CachePoolError):
+    """A slot/row/block was released twice."""
+
+
+class CapacityError(CachePoolError):
+    """A write or admission exceeded what the pool can physically hold."""
+
+
+@runtime_checkable
+class KVCachePool(Protocol):
+    """What the engine requires of a KV layout.
+
+    Attributes: ``k``/``v`` device buffers consumed by the jitted decode,
+    ``pos`` per-lane filled positions, ``n_slots`` decode-batch width,
+    ``n_free`` free concurrency units, ``max_request_tokens`` the longest
+    admissible request.  Layout-specific admission/write paths stay on the
+    concrete classes; the engine dispatches on ``kv_layout`` for those.
+    """
+    n_slots: int
+
+    @property
+    def n_free(self) -> int: ...
+
+    @property
+    def max_request_tokens(self) -> int: ...
+
+    def release(self, slot: int) -> None: ...
+
+    def update(self, caches: dict, active_mask) -> None: ...
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -42,12 +83,20 @@ class SlotKVPool:
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def max_request_tokens(self) -> int:
+        return self.max_len
+
     def alloc(self) -> int | None:
         return self._free.pop() if self._free else None
 
-    def free(self, slot: int) -> None:
-        assert slot not in self._free
+    def release(self, slot: int) -> None:
+        if slot in self._free:
+            raise DoubleFree(f"release of free slot {slot}")
         self._free.append(slot)
+
+    # kept for existing callers; same semantics as release
+    free = release
 
     # ---------------------------------------------------------------- data
     def write_prefill_group(self, slots: list[int], k, v,
@@ -59,7 +108,9 @@ class SlotKVPool:
         prompt length hold pad-token KV but are never visible: attention
         masks by the slot's pos, and decode overwrites position p before
         any query attends to it."""
-        assert max(lengths) <= self.max_len
+        if max(lengths) > self.max_len:
+            raise CapacityError(f"prefill of {max(lengths)} tokens exceeds "
+                                f"slot capacity {self.max_len}")
         w = min(k.shape[2], self.max_len)
         slots_arr = jnp.asarray(slots)
         self.k = _install(self.k, k[:, :, :w], slots_arr)

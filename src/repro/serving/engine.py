@@ -1,14 +1,31 @@
 """Continuous-batching serving engine over the model zoo's compressed-weight
 path.
 
-The engine owns a slot-based preallocated KV pool (cache_pool.py) and runs
-iteration-level scheduling: every ``step()`` evicts expired queue entries,
-admits new requests into free slots (bounded prefill work interleaved
-between decode steps), then advances ALL running requests by one token in a
-single slot-indexed decode step.  New requests join the running batch
-without disturbing it — per-row attention/norms are independent and each
-slot carries its own cache position, so a request's tokens are identical
-whether it runs alone or packed next to strangers (tested).
+The engine owns a preallocated KV pool and runs iteration-level
+scheduling: every ``step()`` evicts expired queue entries, admits new
+requests (bounded prefill work interleaved between decode steps), then
+advances ALL running requests by one token in a single fused decode step.
+New requests join the running batch without disturbing it — per-row
+attention/norms are independent and each lane carries its own cache
+position, so a request's tokens are identical whether it runs alone or
+packed next to strangers (tested).
+
+Two KV layouts behind one API (``kv_layout=``):
+
+  "slot"   SlotKVPool: contiguous [L, n_slots, max_len, KV, hd] buffers,
+           one slot reserved per request for its lifetime.  Simplest and
+           compile-once, but reserves max_len tokens of HBM per slot.
+  "paged"  PagedKVPool (serving/paged/): KV lives in block_size-token
+           blocks allocated on demand from a shared arena, found through
+           per-request block tables and attended via a gather-based
+           paged decode step (models/transformer.decode_step_paged).
+           Identical prefixes share blocks read-only (prefix cache), so
+           a fleet of requests with one system prompt stores its KV
+           once and skips recomputing it (lower TTFT).  Admission is
+           block-aware and decode pressure preempts the youngest request
+           back to the queue instead of failing; a preempted request
+           resumes by re-prefilling prompt + generated-so-far, which
+           reproduces its token stream exactly.
 
 Works unchanged for dense weights or ``SparseWeight`` compressed params
 (models/sparse_serving.py): the weights are just a pytree passed through the
@@ -39,12 +56,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer as tfm
-from .cache_pool import SlotKVPool
+from .cache_pool import CachePoolError, SlotKVPool
+from .paged import OutOfBlocks, PagedKVPool
 from .request import Request, SamplingParams, Status
 from .sampling import sample_tokens
-from .scheduler import QueueFull, RequestQueue, admission_budget
+from .scheduler import (QueueFull, RequestQueue, admission_budget,
+                        pick_preemption_victim)
 
 SUPPORTED_FAMILIES = ("dense", "moe")
+KV_LAYOUTS = ("slot", "paged")
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -57,21 +77,37 @@ def _bucket(n: int, lo: int = 8) -> int:
 class ServingEngine:
     def __init__(self, cfg, params, *, n_slots: int = 8, max_len: int = 256,
                  max_queue: int = 64, queue_timeout_s: float | None = None,
-                 max_prefill_per_step: int = 2, clock=time.monotonic):
+                 max_prefill_per_step: int = 2, kv_layout: str = "slot",
+                 block_size: int = 16, n_blocks: int | None = None,
+                 prefix_caching: bool = True, lookahead_blocks: int = 1,
+                 paged_attn_backend: str | None = None,
+                 clock=time.monotonic):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServingEngine supports {SUPPORTED_FAMILIES} families, not "
                 f"{cfg.family!r}; use the one-shot path in launch/serve.py")
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
+                             f"not {kv_layout!r}")
         self.cfg = cfg
         self.params = params
-        self.pool = SlotKVPool(cfg, n_slots, max_len)
+        self.kv_layout = kv_layout
+        if kv_layout == "paged":
+            self.pool = PagedKVPool(cfg, n_slots, max_len,
+                                    block_size=block_size, n_blocks=n_blocks,
+                                    prefix_caching=prefix_caching)
+        else:
+            self.pool = SlotKVPool(cfg, n_slots, max_len)
         self.queue = RequestQueue(max_queue, queue_timeout_s)
         self.max_prefill_per_step = max_prefill_per_step
-        self.running: dict[int, Request] = {}        # slot -> request
+        self.lookahead_blocks = lookahead_blocks
+        self.running: dict[int, Request] = {}        # slot/row -> request
         self.finished: list[Request] = []
         self._clock = clock
         self._next_id = 0
         self.n_steps = 0
+        self.n_preemptions = 0
+        self.max_running = 0
 
         # per-slot sampling state (host side, fixed shapes)
         self._temps = np.zeros((n_slots,), np.float32)
@@ -85,11 +121,21 @@ class ServingEngine:
 
         self._prefill_fn = jax.jit(
             lambda p, t: tfm.forward(p, {"tokens": t}, cfg, collect_kv=True))
+        # suffix prefill against gathered prefix KV (paged prefix-cache
+        # hits); retraces once per (prefix_len, bucket) shape pair
+        self._prefix_prefill_fn = jax.jit(
+            lambda p, t, pk, pv: tfm.forward_with_prefix(
+                p, {"tokens": t}, cfg, pk, pv))
         # k/v are donated: the pool adopts the step's output buffers, so the
         # multi-GB caches update in place instead of being copied every token
         self._decode_fn = jax.jit(
             lambda p, k, v, pos, t: tfm.decode_step(
                 p, {"k": k, "v": v, "pos": pos}, {"tokens": t}, cfg),
+            donate_argnums=(1, 2))
+        self._decode_paged_fn = jax.jit(
+            lambda p, k, v, bt, pos, t: tfm.decode_step_paged(
+                p, {"k": k, "v": v, "block_tables": bt, "pos": pos},
+                {"tokens": t}, cfg, attn_backend=paged_attn_backend),
             donate_argnums=(1, 2))
 
     # ------------------------------------------------------------ admission
@@ -97,18 +143,19 @@ class ServingEngine:
                on_token=None, on_finish=None) -> Request:
         """Enqueue a request; raises QueueFull when admission control
         rejects (queue at capacity) and ValueError when the request can
-        never fit a slot."""
+        never fit the KV pool."""
         sampling = sampling or SamplingParams()
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
         if not prompt:
             raise ValueError("empty prompt")
         if sampling.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        if len(prompt) + sampling.max_new_tokens > self.pool.max_len:
+        capacity = self.pool.max_request_tokens
+        if len(prompt) + sampling.max_new_tokens > capacity:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens "
-                f"({sampling.max_new_tokens}) exceeds slot capacity "
-                f"{self.pool.max_len}")
+                f"({sampling.max_new_tokens}) exceeds KV capacity "
+                f"{capacity}")
         req = Request(self._next_id, prompt, sampling,
                       on_token=on_token, on_finish=on_finish)
         self._next_id += 1
@@ -125,7 +172,8 @@ class ServingEngine:
     def step(self) -> dict:
         """One scheduling iteration: evict -> admit/prefill -> decode."""
         now = self._clock()
-        stats = {"evicted": 0, "admitted": 0, "finished": 0, "decoded": 0}
+        stats = {"evicted": 0, "admitted": 0, "finished": 0, "decoded": 0,
+                 "preempted": 0}
 
         for req in self.queue.evict_expired(now):
             req._finish(Status.EVICTED, now)
@@ -136,12 +184,12 @@ class ServingEngine:
                                   len(self.running), self.max_prefill_per_step)
         if budget:
             admits = [self.queue.pop() for _ in range(budget)]
-            stats["admitted"] = len(admits)
-            stats["finished"] += self._admit(admits)
+            stats["finished"] += self._admit(admits, stats)
 
+        self.max_running = max(self.max_running, len(self.running))
         if self.running:
             stats["decoded"] = len(self.running)
-            stats["finished"] += self._decode_once()
+            stats["finished"] += self._decode_once(stats)
 
         self.n_steps += 1
         return stats
@@ -154,17 +202,72 @@ class ServingEngine:
             steps += 1
         return self.finished
 
+    def stats(self) -> dict:
+        """Engine-level counters plus the pool's memory/prefix accounting."""
+        out = {"n_steps": self.n_steps, "max_running": self.max_running,
+               "n_preemptions": self.n_preemptions,
+               "kv_layout": self.kv_layout}
+        if self.kv_layout == "paged":
+            out["pool"] = self.pool.stats()
+        return out
+
+    def reset_stats(self) -> None:
+        """Zero the step/preemption/concurrency/prefix counters (cached KV
+        and compiled functions are kept) — benchmarks call this between a
+        warm-up pass and the measured window."""
+        self.n_steps = 0
+        self.n_preemptions = 0
+        self.max_running = 0
+        if self.kv_layout == "paged":
+            self.pool.reset_stats()
+
     # ------------------------------------------------------------ internals
-    def _admit(self, reqs: list[Request]) -> int:
-        """Prefill ``reqs`` (grouped by padded-length bucket, chunked to a
-        fixed batch of max_prefill_per_step rows so each bucket compiles
-        exactly one prefill shape), install their KV into slots, and emit
-        each request's first token.  Returns the number of requests that
-        finished immediately (max_new_tokens == 1 or instant EOS)."""
+    @staticmethod
+    def _seq(req: Request) -> list[int]:
+        """The token sequence a (re-)prefill must cover: the prompt plus
+        anything already generated before a preemption."""
+        return list(req.prompt) + req.tokens
+
+    def _admit(self, reqs: list[Request], stats: dict) -> int:
+        """Prefill ``reqs`` (grouped so each shape compiles exactly once),
+        install their KV, and emit each request's next token.  Returns the
+        number of requests that finished immediately."""
+        if self.kv_layout == "paged":
+            placed, deferred = [], []
+            for i, r in enumerate(reqs):
+                if deferred:
+                    deferred.append(r)
+                    continue
+                seq = self._seq(r)
+                if not self.pool.can_admit(len(seq), self.lookahead_blocks):
+                    deferred.append(r)
+                    continue
+                try:
+                    row, n_cached = self.pool.admit(seq)
+                except OutOfBlocks:
+                    deferred.append(r)
+                    continue
+                placed.append((r, row, n_cached))
+            for r in reversed(deferred):      # keep FIFO order at the head
+                self.queue.push_front(r)
+            stats["admitted"] += len(placed)
+            by_shape: dict[tuple[int, int], list] = {}
+            for r, row, n_cached in placed:
+                suffix = len(self._seq(r)) - n_cached
+                by_shape.setdefault((n_cached, _bucket(suffix)),
+                                    []).append((r, row))
+            n_finished = 0
+            chunk = max(self.max_prefill_per_step, 1)
+            for (n_cached, bucket), group in sorted(by_shape.items()):
+                for start in range(0, len(group), chunk):
+                    n_finished += self._prefill_group_paged(
+                        group[start:start + chunk], n_cached, bucket, chunk)
+            return n_finished
+
+        stats["admitted"] += len(reqs)
         by_bucket: dict[int, list[Request]] = {}
         for r in reqs:
-            by_bucket.setdefault(_bucket(r.prompt_len), []).append(r)
-
+            by_bucket.setdefault(_bucket(len(self._seq(r))), []).append(r)
         n_finished = 0
         chunk = max(self.max_prefill_per_step, 1)
         for bucket, bucket_group in sorted(by_bucket.items()):
@@ -173,44 +276,125 @@ class ServingEngine:
                 n_finished += self._prefill_group(group, bucket, chunk)
         return n_finished
 
+    def _install_running(self, req: Request, slot: int, now: float) -> None:
+        req.slot = slot
+        req.status = Status.RUNNING
+        req.metrics.admitted = now
+        self.running[slot] = req
+        self._temps[slot] = req.sampling.temperature
+        self._topks[slot] = req.sampling.top_k
+        self._seeds[slot] = req.sampling.seed
+        # resumed requests continue their sampling stream at token index
+        # len(tokens); fresh requests start at 0
+        self._gen_count[slot] = len(req.tokens)
+
     def _prefill_group(self, group: list[Request], bucket: int,
                        batch_pad: int) -> int:
+        """Slot-layout prefill: full prompts, contiguous slot install."""
         B = max(len(group), batch_pad)
+        seqs = [self._seq(r) for r in group]
         tokens = np.zeros((B, bucket), np.int32)
-        for i, r in enumerate(group):
-            tokens[i, :r.prompt_len] = r.prompt
+        for i, s in enumerate(seqs):
+            tokens[i, :len(s)] = s
         logits, (k, v) = self._prefill_fn(self.params, jnp.asarray(tokens))
 
         now = self._clock()
         slots = []
         for r in group:
             slot = self.pool.alloc()
-            assert slot is not None, "scheduler admitted past free slots"
-            r.slot = slot
-            r.status = Status.RUNNING
-            r.metrics.admitted = now
-            self.running[slot] = r
-            self._temps[slot] = r.sampling.temperature
-            self._topks[slot] = r.sampling.top_k
-            self._seeds[slot] = r.sampling.seed
-            self._gen_count[slot] = 0
+            if slot is None:
+                raise CachePoolError("scheduler admitted past free slots")
+            self._install_running(r, slot, now)
             slots.append(slot)
         n = len(group)                      # real rows; the rest is batch pad
         self.pool.write_prefill_group(slots, k[:, :n], v[:, :n],
-                                      [r.prompt_len for r in group])
+                                      [len(s) for s in seqs])
 
-        lens = np.array([r.prompt_len for r in group]) - 1
+        lens = np.array([len(s) for s in seqs]) - 1
         last_logits = logits[jnp.arange(n), jnp.asarray(lens)]
         self._slot_logits = self._slot_logits.at[jnp.asarray(slots)].set(
             last_logits.astype(jnp.float32))
         return self._emit_tokens(slots)
 
-    def _decode_once(self) -> int:
+    def _prefill_group_paged(self, group: list[tuple], n_cached: int,
+                             bucket: int, batch_pad: int) -> int:
+        """Paged prefill of rows sharing (prefix length, suffix bucket):
+        compute only the uncached suffix, scatter its KV into the rows'
+        blocks, and publish full prompt blocks to the prefix cache."""
+        B = max(len(group), batch_pad)
+        rows = [row for _, row in group]
+        seqs = [self._seq(r) for r, _ in group]
+        suffixes = [s[n_cached:] for s in seqs]
+        tokens = np.zeros((B, bucket), np.int32)
+        for i, s in enumerate(suffixes):
+            tokens[i, :len(s)] = s
+        if n_cached > 0:
+            pk, pv = self.pool.gather_prefix(rows, n_cached, B)
+            logits, (k, v) = self._prefix_prefill_fn(
+                self.params, jnp.asarray(tokens), pk, pv)
+        else:
+            logits, (k, v) = self._prefill_fn(self.params,
+                                              jnp.asarray(tokens))
+
+        now = self._clock()
+        for r, row in group:
+            self._install_running(r, row, now)
+        n = len(group)
+        self.pool.write_prefill(rows, k[:, :n], v[:, :n], n_cached,
+                                [len(s) for s in suffixes])
+        for (r, row), seq in zip(group, seqs):
+            self.pool.register_prefix(row, seq)
+
+        lens = np.array([len(s) for s in suffixes]) - 1
+        last_logits = logits[jnp.arange(n), jnp.asarray(lens)]
+        self._slot_logits = self._slot_logits.at[jnp.asarray(rows)].set(
+            last_logits.astype(jnp.float32))
+        return self._emit_tokens(rows)
+
+    def _preempt_one(self, stats: dict) -> None:
+        """Push the youngest running request back to the queue head and
+        release its blocks; it will resume by re-prefilling."""
+        victim_slot = pick_preemption_victim(self.running)
+        req = self.running.pop(victim_slot)
+        self.pool.release(victim_slot)
+        req.slot = None
+        req.status = Status.QUEUED
+        req.n_preempted += 1
+        self.queue.push_front(req)
+        self.n_preemptions += 1
+        if self.kv_layout == "paged":
+            self.pool.n_preemptions += 1
+        stats["preempted"] += 1
+
+    def _decode_once(self, stats: dict | None = None) -> int:
         """Advance every running slot one token in a single fused step."""
-        active = sorted(self.running)
-        tokens = jnp.asarray(self._last_token[:, None])
-        logits, caches = self._decode_fn(self.params, self.pool.k, self.pool.v,
-                                         self.pool.pos, tokens)
+        stats = stats if stats is not None else {"preempted": 0}
+        if self.kv_layout == "paged":
+            while True:
+                try:
+                    self.pool.prepare_decode(sorted(self.running))
+                    break
+                except OutOfBlocks:
+                    if len(self.running) <= 1:
+                        # cannot happen for admissible requests (submit
+                        # bounds prompt+gen by pool capacity), so this is
+                        # an accounting bug, not workload pressure
+                        raise CachePoolError(
+                            "sole running request cannot grow its KV")
+                    self._preempt_one(stats)
+            if not self.running:
+                return 0
+            active = sorted(self.running)
+            tokens = jnp.asarray(self._last_token[:, None])
+            logits, caches = self._decode_paged_fn(
+                self.params, self.pool.k, self.pool.v,
+                self.pool.block_tables, self.pool.pos, tokens)
+        else:
+            active = sorted(self.running)
+            tokens = jnp.asarray(self._last_token[:, None])
+            logits, caches = self._decode_fn(self.params, self.pool.k,
+                                             self.pool.v, self.pool.pos,
+                                             tokens)
         self._slot_logits = logits.astype(jnp.float32)
         n_finished = self._emit_tokens(active)
         still = np.zeros((self.pool.n_slots,), bool)
@@ -239,6 +423,6 @@ class ServingEngine:
                 req._finish(Status.FINISHED, now)
                 self.finished.append(req)
                 del self.running[slot]
-                self.pool.free(slot)
+                self.pool.release(slot)
                 n_finished += 1
         return n_finished

@@ -1,0 +1,112 @@
+"""Ref-counted block allocator over one preallocated paged KV arena.
+
+The arena is a single pair of k/v buffers shaped
+``[L, n_blocks, block_size, KV, hd]`` allocated once at engine start —
+the paged analogue of SlotKVPool's ``[L, n_slots, max_len, KV, hd]``
+reservation, but handed out in ``block_size``-token units with reference
+counts so physical blocks can be shared read-only between requests
+(prefix caching) and copied on write when a sharer needs to mutate one.
+
+The pool itself is policy-free: it allocates, increfs, decrefs, and
+copies blocks.  Who shares what (prefix_cache.py) and who owns which
+block when (pool.py / the engine) live above it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BlockPoolError(RuntimeError):
+    """Invariant violation in block accounting (double free, bad ref)."""
+
+
+class OutOfBlocks(RuntimeError):
+    """No free block available; callers evict prefix-cache entries or
+    preempt a running request and retry."""
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_block(arena, dst, src):
+    """arena[:, dst] = arena[:, src], in place (donated)."""
+    return jax.lax.dynamic_update_index_in_dim(
+        arena, jax.lax.dynamic_index_in_dim(arena, src, 1, keepdims=False),
+        dst, 1)
+
+
+class BlockPool:
+    def __init__(self, cfg, n_blocks: int, block_size: int):
+        if n_blocks < 1:
+            raise ValueError("need at least one block")
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        shape = (L, n_blocks, block_size, KV, hd)
+        self.k = jnp.zeros(shape, cfg.dtype)
+        self.v = jnp.zeros(shape, cfg.dtype)
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.ref = np.zeros((n_blocks,), np.int32)
+        self._free = list(range(n_blocks - 1, -1, -1))   # pop() -> ascending
+        # prefix-cache bookkeeping: which blocks the cache has registered,
+        # and how many of those only the cache still references (ref == 1,
+        # i.e. evictable).  Maintained incrementally at every refcount
+        # transition so the admission hot path reads it O(1) instead of
+        # scanning the cache.
+        self._cached = np.zeros((n_blocks,), bool)
+        self.n_cached_idle = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        """Hand out a free block with refcount 1."""
+        if not self._free:
+            raise OutOfBlocks(f"all {self.n_blocks} KV blocks in use")
+        b = self._free.pop()
+        self.ref[b] = 1
+        return b
+
+    def mark_cached(self, block: int) -> None:
+        """Called by the prefix cache when it registers ``block``."""
+        if not self._cached[block]:
+            self._cached[block] = True
+            if self.ref[block] == 1:
+                self.n_cached_idle += 1
+
+    def incref(self, block: int) -> None:
+        if self.ref[block] <= 0:
+            raise BlockPoolError(f"incref on free block {block}")
+        if self._cached[block] and self.ref[block] == 1:
+            self.n_cached_idle -= 1          # cache-idle -> shared
+        self.ref[block] += 1
+
+    def decref(self, block: int) -> bool:
+        """Drop one reference; returns True when the block was freed."""
+        if self.ref[block] <= 0:
+            raise BlockPoolError(f"decref on free block {block} (double free)")
+        self.ref[block] -= 1
+        r = int(self.ref[block])
+        if self._cached[block]:
+            if r == 1:
+                self.n_cached_idle += 1      # only the cache holds it now
+            elif r == 0:
+                self.n_cached_idle -= 1      # cache entry evicted
+                self._cached[block] = False
+        if r == 0:
+            self._free.append(block)
+            return True
+        return False
+
+    def copy_on_write(self, block: int) -> int:
+        """Give the caller a private copy of ``block``: allocates a fresh
+        block, copies the KV contents on device, and drops one reference
+        on the original.  Raises OutOfBlocks when no block is free."""
+        dst = self.alloc()
+        src_, dst_ = jnp.int32(block), jnp.int32(dst)
+        self.k = _copy_block(self.k, dst_, src_)
+        self.v = _copy_block(self.v, dst_, src_)
+        self.decref(block)
+        return dst

@@ -1,0 +1,174 @@
+"""Paged decode attention: one query token per row over block-mapped KV.
+
+Two implementations behind one entry point:
+
+- ``reference``: gather the row's blocks into a contiguous
+  ``[B, nb*block_size, KV, hd]`` view with ``arena[block_tables]`` and run
+  the same masked softmax as ``models/layers.decode_attention``.  Because a
+  table maps sequence position ``p`` to gathered index ``p`` exactly, the
+  ``< cache_len`` mask carries over unchanged — XLA fuses the gather, so
+  this is also the portable CPU/GPU path.
+- ``pallas``: a TPU kernel (interpret-mode fallback off-TPU) that never
+  materializes the gathered view.  The block table rides in as a
+  scalar-prefetch operand, the grid is ``(B, nb)`` with blocks innermost,
+  and each step DMAs exactly one physical KV block — the index map reads
+  ``block_tables[b, j]`` — accumulating flash-style (running max / sum /
+  weighted value in VMEM scratch).  HBM traffic is therefore proportional
+  to the tokens a request has actually written, not to a reserved
+  ``max_len``, which is the whole point of paging the cache.
+
+Both paths mask with a finite ``-1e30`` (exp underflows to exactly 0.0
+against any real row max), so padding blocks — table entries past a short
+row point at the shared trash block — contribute exactly nothing and the
+result is bit-comparable with the contiguous slot-cache attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _default_backend() -> str:
+    env = os.environ.get("REPRO_PAGED_BACKEND")
+    if env:
+        return env
+    # interpret-mode Pallas is a Python loop over the grid — fine for
+    # validation, far too slow to serve from on CPU
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+# --------------------------------------------------------------------------
+# reference (jnp gather)
+# --------------------------------------------------------------------------
+
+def paged_attention_ref(q, k_arena, v_arena, block_tables, cache_len,
+                        *, window: int | None = None) -> jax.Array:
+    """q [B,1,H,hd]; arenas [n_blocks, bs, KV, hd]; block_tables [B, nb]
+    int32; cache_len [B] (tokens visible per row).  Returns [B,1,H,hd]."""
+    B, _, H, hd = q.shape
+    _, bs, KV, _ = k_arena.shape
+    nb = block_tables.shape[1]
+    k = k_arena[block_tables].reshape(B, nb * bs, KV, hd)
+    v = v_arena[block_tables].reshape(B, nb * bs, KV, hd)
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, H, hd)
+    scores = jnp.einsum("bhd,bshd->bhs", qf, k.astype(jnp.float32))
+    idx = jnp.arange(nb * bs)[None]
+    valid = idx < cache_len[:, None]
+    if window is not None:
+        valid &= idx >= jnp.maximum(cache_len[:, None] - window, 0)
+    scores = jnp.where(valid[:, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# pallas kernel
+# --------------------------------------------------------------------------
+
+def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, bs, nb, n_rep, window):
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hd = q_ref.shape[-1]
+    qf = q_ref[0].astype(jnp.float32) / math.sqrt(hd)         # [H, hd]
+    k = k_ref[0].astype(jnp.float32)                          # [bs, KV, hd]
+    v = v_ref[0].astype(jnp.float32)
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=1)                      # [bs, H, hd]
+        v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("hd,shd->hs", qf, k)                       # [H, bs]
+
+    seq_len = len_ref[b]
+    idx = j * bs + jax.lax.iota(jnp.int32, bs)                # [bs]
+    valid = idx < seq_len
+    if window is not None:
+        valid &= idx >= jnp.maximum(seq_len - window, 0)
+    s = jnp.where(valid[None, :], s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]                   # [H,1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                    # [H, bs]
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("hs,shd->hd", p, v)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom)[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret"))
+def paged_attention_pallas(q, k_arena, v_arena, block_tables, cache_len,
+                           *, window: int | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """Same contract as ``paged_attention_ref``; one grid step per
+    (row, block), KV blocks DMA'd by table lookup via scalar prefetch."""
+    B, _, H, hd = q.shape
+    n_blocks, bs, KV, _ = k_arena.shape
+    nb = block_tables.shape[1]
+    n_rep = H // KV
+    q3 = q.reshape(B, H, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # block tables, cache lens
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),    # running max
+            pltpu.VMEM((H, 1), jnp.float32),    # running sum
+            pltpu.VMEM((H, hd), jnp.float32),   # weighted-value accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, bs=bs, nb=nb, n_rep=n_rep,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), cache_len.astype(jnp.int32),
+      q3, k_arena, v_arena)
+    return out.reshape(B, 1, H, hd)
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+def paged_attention(q, k_arena, v_arena, block_tables, cache_len, *,
+                    window: int | None = None,
+                    backend: str | None = None) -> jax.Array:
+    backend = backend or _default_backend()
+    if backend == "pallas":
+        return paged_attention_pallas(
+            q, k_arena, v_arena, block_tables, cache_len, window=window,
+            interpret=jax.default_backend() != "tpu")
+    return paged_attention_ref(q, k_arena, v_arena, block_tables, cache_len,
+                               window=window)

@@ -1,0 +1,302 @@
+"""PagedKVPool: the engine-facing facade over the paged-KV machinery.
+
+Satisfies the same cache-pool protocol as ``SlotKVPool``
+(``serving/cache_pool.py``): ``n_free`` concurrency units, a
+``max_request_tokens`` admission bound, ``k``/``v``/``pos`` device state
+the jitted decode consumes, and ``release``/``update`` lifecycle hooks.
+The difference is what backs a request: a *row* here is only scheduling
+state (a decode-batch lane plus a block table); the KV bytes live in
+``block_size``-token blocks allocated on demand from one shared arena
+(``block_pool.py``), found via the per-row table (``block_table.py``),
+and shared across requests with identical prefixes (``prefix_cache.py``).
+
+Admission therefore decouples concurrency from reservation: a row costs
+nothing until tokens are actually written, so ``n_rows`` can far exceed
+what per-row ``max_len`` reservation would allow in the same HBM.  The
+flip side is that the arena can run dry mid-decode; ``prepare_decode``
+raises ``OutOfBlocks`` and the engine preempts a running request back to
+the queue instead of failing.
+
+One block is reserved as the *trash block*: inactive decode-batch rows
+(and prefill padding) point their tables/slots at it so the fused decode
+step can write unconditionally for every lane without corrupting blocks
+that were recycled to another request.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..cache_pool import CapacityError, DoubleFree
+from .block_pool import BlockPool, OutOfBlocks
+from .block_table import BlockTable, blocks_needed
+from .prefix_cache import PrefixCache
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_tokens(arena, vals, slots):
+    """Write ``vals [L, T, KV, hd]`` at flat token ``slots [T]`` of the
+    arena (viewed as [L, n_blocks*bs, KV, hd]), in place (donated)."""
+    L, nb, bs = arena.shape[:3]
+    flat = arena.reshape(L, nb * bs, *arena.shape[3:])
+    flat = flat.at[:, slots].set(vals.astype(arena.dtype))
+    return flat.reshape(arena.shape)
+
+
+class PagedKVPool:
+    def __init__(self, cfg, n_rows: int, max_len: int, *,
+                 block_size: int = 16, n_blocks: int | None = None,
+                 prefix_caching: bool = True):
+        self.block_size = block_size
+        self.max_blocks_per_row = blocks_needed(max_len, block_size)
+        if n_blocks is None:
+            # same HBM as a SlotKVPool(n_rows, max_len) reservation
+            n_blocks = n_rows * self.max_blocks_per_row
+        self.blocks = BlockPool(cfg, n_blocks + 1, block_size)  # +1 trash
+        self._trash = self.blocks.alloc()                       # permanent
+        self.n_blocks = n_blocks                                # usable
+        self.n_rows = n_rows
+        self.max_len = max_len
+        self.prefix_cache = PrefixCache(self.blocks) if prefix_caching \
+            else None
+        self.tables: list[BlockTable | None] = [None] * n_rows
+        self._bt_np = np.full((n_rows, self.max_blocks_per_row),
+                              self._trash, np.int32)
+        self._bt_jnp = jnp.asarray(self._bt_np)
+        self._bt_dirty = False
+        self._pos_np = np.zeros((n_rows,), np.int32)
+        self._free_rows = list(range(n_rows - 1, -1, -1))
+        self.n_preemptions = 0
+
+    # ----------------------------------------------------- protocol attrs
+    @property
+    def k(self):
+        return self.blocks.k
+
+    @property
+    def v(self):
+        return self.blocks.v
+
+    @property
+    def pos(self):
+        return jnp.asarray(self._pos_np)
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_rows
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free_rows)
+
+    @property
+    def max_request_tokens(self) -> int:
+        """Longest request (prompt + generation) that can ever complete."""
+        return min(self.max_len, self.n_blocks * self.block_size)
+
+    @property
+    def block_tables(self):
+        if self._bt_dirty:
+            self._bt_jnp = jnp.asarray(self._bt_np)
+            self._bt_dirty = False
+        return self._bt_jnp
+
+    # -------------------------------------------------------- allocation
+    @property
+    def free_blocks(self) -> int:
+        """Blocks obtainable right now: free-list plus evictable cache."""
+        n = self.blocks.n_free
+        if self.prefix_cache is not None:
+            n += self.prefix_cache.n_evictable
+        return n
+
+    def can_admit(self, n_tokens: int, lookahead_blocks: int = 1) -> bool:
+        """Block-aware admission: a free row, and enough obtainable blocks
+        to hold the whole prompt plus a decode lookahead margin.  A prefix
+        hit can only reduce the real need, so this is conservative.  The
+        requirement is clamped to the arena size so a request whose prompt
+        alone fills the arena (legal: submit() bounds prompt+generation by
+        capacity) is not deferred forever by the margin."""
+        if not self._free_rows:
+            return False
+        need = min(blocks_needed(n_tokens, self.block_size)
+                   + lookahead_blocks, self.n_blocks)
+        return need <= self.free_blocks
+
+    def _alloc_block(self) -> int:
+        while True:
+            try:
+                return self.blocks.alloc()
+            except OutOfBlocks:
+                if self.prefix_cache is None \
+                        or not self.prefix_cache.evict_one():
+                    raise
+
+    def _cow(self, block: int) -> int:
+        while True:
+            try:
+                return self.blocks.copy_on_write(block)
+            except OutOfBlocks:
+                if self.prefix_cache is None \
+                        or not self.prefix_cache.evict_one():
+                    raise
+
+    # --------------------------------------------------------- admission
+    def admit(self, tokens) -> tuple[int, int]:
+        """Assign a row and map the prompt onto blocks.
+
+        Matches the longest cached prefix (sharing those blocks
+        read-only), allocates fresh blocks for the rest, and returns
+        ``(row, n_cached)`` — the prefill only needs to compute
+        ``tokens[n_cached:]``.  At least the final prompt token is always
+        recomputed so there are logits to sample the first generated
+        token from; when that token's block was itself a cache hit, the
+        block is first copied copy-on-write so the shared original stays
+        immutable.  Raises ``OutOfBlocks`` (engine requeues the request)
+        without leaking references.
+        """
+        if not self._free_rows:
+            raise CapacityError("admit called with no free rows")
+        n = len(tokens)
+        if n > self.max_request_tokens:
+            raise CapacityError(
+                f"prompt of {n} tokens exceeds pool capacity "
+                f"{self.max_request_tokens}")
+        matched = self.prefix_cache.match(tokens) \
+            if self.prefix_cache is not None else []
+        bs = self.block_size
+        # at least the final prompt token must be recomputed (its logits
+        # seed the first generated token), and the cached count is kept on
+        # a block boundary so suffix prefills see a handful of distinct
+        # (prefix_len, bucket) shapes instead of one per prompt length
+        n_cached = min(len(matched) * bs, (n - 1) // bs * bs) if matched \
+            else 0
+        table_blocks = list(matched)
+        try:
+            if matched and n_cached < len(matched) * bs:
+                # the recomputed prompt tail lands inside the final matched
+                # block -> take a private copy before writing (the shared
+                # original may be serving other requests read-only)
+                if self.blocks.ref[table_blocks[-1]] > 1:
+                    table_blocks[-1] = self._cow(table_blocks[-1])
+            for _ in range(blocks_needed(n, bs) - len(table_blocks)):
+                table_blocks.append(self._alloc_block())
+        except OutOfBlocks:
+            for b in table_blocks:
+                self.blocks.decref(b)
+            raise
+        row = self._free_rows.pop()
+        self.tables[row] = BlockTable(bs, table_blocks, n_cached)
+        self._bt_np[row, :] = self._trash
+        self._bt_np[row, :len(table_blocks)] = table_blocks
+        self._bt_dirty = True
+        self._pos_np[row] = 0            # set for real by write_prefill
+        return row, n_cached
+
+    # -------------------------------------------------------------- data
+    def write_prefill(self, rows: list[int], k, v, n_cached: int,
+                      lengths: list[int]) -> None:
+        """Scatter a prefill group's suffix KV into the rows' blocks.
+
+        ``k``/``v``: [L, B, S_bucket, KV, hd] with B >= len(rows) (batch
+        pad) and S_bucket >= each row's suffix length (bucket pad).  Real
+        (row, position) pairs map to their table slots; every pad element
+        maps to the trash block, so the scatter shape is fixed per
+        (bucket, batch) and compiles once."""
+        L, B, S = k.shape[:3]
+        bs = self.block_size
+        if max(lengths) > S:
+            raise CapacityError(f"suffix of {max(lengths)} tokens exceeds "
+                                f"prefill bucket {S}")
+        trash_slot = self._trash * bs
+        slots = np.full((B, S), trash_slot, np.int64)
+        for i, (row, ln) in enumerate(zip(rows, lengths)):
+            t = self.tables[row]
+            for s in range(ln):
+                slots[i, s] = t.slot(n_cached + s)
+            self._pos_np[row] = n_cached + ln
+        slots = jnp.asarray(slots.reshape(-1))
+        self.blocks.k = _scatter_tokens(
+            self.blocks.k, k.reshape(L, B * S, *k.shape[3:]), slots)
+        self.blocks.v = _scatter_tokens(
+            self.blocks.v, v.reshape(L, B * S, *v.shape[3:]), slots)
+
+    def register_prefix(self, row: int, tokens) -> None:
+        """Publish the row's full prompt blocks into the prefix cache."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(tokens, self.tables[row].blocks)
+
+    def gather_prefix(self, rows: list[int], n_cached: int,
+                      n_rows_padded: int):
+        """Materialize [L, B, n_cached, KV, hd] prefix KV for a suffix-
+        prefill group (batch-pad rows replicate the trash block)."""
+        bs = self.block_size
+        nb = blocks_needed(n_cached, bs)
+        ids = np.full((n_rows_padded, nb), self._trash, np.int32)
+        for i, row in enumerate(rows):
+            ids[i] = self.tables[row].blocks[:nb]
+        idsj = jnp.asarray(ids)
+        L = self.blocks.k.shape[0]
+
+        def gather(arena):
+            g = arena[:, idsj]                    # [L, B, nb, bs, KV, hd]
+            g = g.reshape(L, n_rows_padded, nb * bs, *g.shape[4:])
+            return g[:, :, :n_cached]
+        return gather(self.blocks.k), gather(self.blocks.v)
+
+    def prepare_decode(self, rows: list[int]) -> None:
+        """Ensure every active row can write its next position: allocate a
+        block at each block boundary (raises ``OutOfBlocks`` — the engine
+        preempts and retries) and copy-on-write in the defensive case of a
+        shared block in write position."""
+        bs = self.block_size
+        for row in rows:
+            pos = int(self._pos_np[row])
+            t = self.tables[row]
+            bi = pos // bs
+            if bi >= t.n_blocks:
+                t.append_block(self._alloc_block())
+                self._bt_np[row, bi] = t.blocks[bi]
+                self._bt_dirty = True
+            elif self.blocks.ref[t.blocks[bi]] > 1:
+                fresh = self._cow(t.blocks[bi])
+                t.replace_block(bi, fresh)
+                self._bt_np[row, bi] = fresh
+                self._bt_dirty = True
+
+    def update(self, caches: dict, active_mask) -> None:
+        """Adopt a decode step's donated arenas; positions advance on the
+        host mirror (inactive rows pinned to 0, i.e. the trash slot)."""
+        self.blocks.k = caches["k"]
+        self.blocks.v = caches["v"]
+        active = np.asarray(active_mask)
+        self._pos_np = np.where(active, self._pos_np + 1, 0).astype(np.int32)
+
+    # --------------------------------------------------------- lifecycle
+    def release(self, row: int) -> None:
+        t = self.tables[row]
+        if t is None:
+            raise DoubleFree(f"release of free row {row}")
+        for b in t.blocks:
+            self.blocks.decref(b)        # cached blocks survive via cache ref
+        self.tables[row] = None
+        self._bt_np[row, :] = self._trash
+        self._bt_dirty = True
+        self._pos_np[row] = 0
+        self._free_rows.append(row)
+
+    def stats(self) -> dict:
+        out = {"n_blocks": self.n_blocks, "block_size": self.block_size,
+               "free_blocks": self.blocks.n_free,
+               "n_preemptions": self.n_preemptions}
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
+        return out
+
+    def reset_stats(self) -> None:
+        self.n_preemptions = 0
+        if self.prefix_cache is not None:
+            self.prefix_cache.reset_stats()

@@ -51,6 +51,9 @@ class Request:
     slot: int | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
     metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
+    # times the paged engine preempted this request back to the queue
+    # (generated tokens are kept; it resumes by re-prefilling prompt+tokens)
+    n_preempted: int = 0
 
     @property
     def prompt_len(self) -> int:

@@ -1,8 +1,8 @@
 """Request queue (admission/eviction) and prefill/decode interleaving policy.
 
 Admission control is two-level: ``submit`` rejects outright when the queue is
-at capacity or the request can never fit a slot (prompt + max_new_tokens >
-slot capacity); queued requests past ``queue_timeout_s`` are evicted at the
+at capacity or the request can never fit the KV pool (prompt + max_new_tokens
+> pool capacity); queued requests past ``queue_timeout_s`` are evicted at the
 head of every engine step, bounding worst-case queue wait.
 
 The interleave policy bounds how many prefills run between consecutive
@@ -11,6 +11,15 @@ starve in-flight decodes — the classic continuous-batching latency/
 throughput trade (Orca / vLLM-style iteration-level scheduling).  When
 nothing is decoding, the bound is lifted: prefill-only work fills all free
 slots at once.
+
+Under the paged KV layout admission is additionally *block-aware*: a
+request is only scheduled while the pool's obtainable blocks (free list
+plus evictable prefix-cache entries) cover its whole prompt plus a decode
+lookahead margin, and when decode outgrows the arena anyway the engine
+preempts the youngest running request back to the queue head
+(``pick_preemption_victim``) rather than hard-failing — it resumes later
+by re-prefilling prompt + generated-so-far, which reproduces its token
+stream exactly (sampling keys are derived from (seed, token index)).
 """
 from __future__ import annotations
 
@@ -41,14 +50,27 @@ class RequestQueue:
     def pop(self) -> Request | None:
         return self._q.popleft() if self._q else None
 
+    def push_front(self, req: Request) -> None:
+        """Return an already-admitted request to the head of the queue
+        (paged admission ran out of blocks, or a preemption).  Bypasses
+        the capacity check: the request was accepted once and must not be
+        silently dropped."""
+        self._q.appendleft(req)
+
     def evict_expired(self, now: float) -> list[Request]:
-        """Drop queued requests older than queue_timeout_s (FIFO order)."""
+        """Drop queued requests older than queue_timeout_s (FIFO order).
+
+        The timeout bounds the wait for FIRST service: requests that were
+        already served and preempted back to the queue (generated tokens
+        in hand) are exempt — evicting them would silently discard
+        completed work, violating push_front's no-drop contract."""
         if self.queue_timeout_s is None:
             return []
         evicted = []
         kept = collections.deque()
         for req in self._q:
-            if now - req.metrics.arrival > self.queue_timeout_s:
+            if (now - req.metrics.arrival > self.queue_timeout_s
+                    and not req.tokens and req.n_preempted == 0):
                 evicted.append(req)
             else:
                 kept.append(req)
@@ -63,3 +85,15 @@ def admission_budget(n_queued: int, n_free_slots: int, n_running: int,
     if n_running > 0:
         budget = min(budget, max_prefill_per_step)
     return budget
+
+
+def pick_preemption_victim(running: dict[int, Request]) -> int:
+    """Slot/row of the request to preempt when the paged arena runs dry.
+
+    Youngest-first (latest admission): the request that has sunk the
+    least work is restarted, and repeated preemption converges — older
+    requests keep their blocks and drain, releasing memory.  Ties (one
+    admission group) break toward the higher request id."""
+    return max(running,
+               key=lambda s: (running[s].metrics.admitted,
+                              running[s].request_id))

@@ -168,6 +168,70 @@ def test_sampling_temperature_and_seed(dense_params):
     assert run(3, 1.0) != run(4, 1.0)                 # seeds decorrelate
 
 
+@pytest.mark.parametrize("kv_layout", ["slot", "paged"])
+class TestSchedulerFailurePaths:
+    """Dedicated coverage for the admission/eviction failure modes, on
+    both KV layouts: queue-timeout eviction, QueueFull, and
+    prompt-exceeds-capacity rejection."""
+
+    def _engine(self, params, kv_layout, **kw):
+        kw.setdefault("n_slots", 1)
+        kw.setdefault("max_len", 32)
+        return ServingEngine(CFG, params, kv_layout=kv_layout,
+                             block_size=8, **kw)
+
+    def test_prompt_exceeding_capacity_rejected(self, dense_params,
+                                                kv_layout):
+        engine = self._engine(dense_params, kv_layout)
+        with pytest.raises(ValueError, match="exceeds KV capacity"):
+            engine.submit(list(range(30)), SamplingParams(max_new_tokens=8))
+        with pytest.raises(ValueError, match="empty prompt"):
+            engine.submit([], SamplingParams(max_new_tokens=2))
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            engine.submit([1, 2], SamplingParams(max_new_tokens=0))
+        assert len(engine.queue) == 0          # nothing leaked into the queue
+
+    def test_queue_full_rejects_not_drops(self, dense_params, kv_layout):
+        engine = self._engine(dense_params, kv_layout, max_queue=2)
+        p = _prompts(3, 8)
+        engine.submit(p[0], SamplingParams(max_new_tokens=2))
+        engine.submit(p[1], SamplingParams(max_new_tokens=2))
+        with pytest.raises(QueueFull):
+            engine.submit(p[2], SamplingParams(max_new_tokens=2))
+        engine.run()                           # accepted requests still run
+        assert sum(r.status is Status.FINISHED for r in engine.finished) == 2
+
+    def test_queue_timeout_evicts_with_callback(self, dense_params,
+                                                kv_layout):
+        t = [0.0]
+        seen = []
+        engine = self._engine(dense_params, kv_layout, max_queue=4,
+                              queue_timeout_s=5.0, clock=lambda: t[0])
+        live = engine.submit(_prompts(1, 8)[0],
+                             SamplingParams(max_new_tokens=2))
+        stale = engine.submit(_prompts(1, 8, seed=4)[0],
+                              SamplingParams(max_new_tokens=2),
+                              on_finish=lambda r: seen.append(r.status))
+        engine.step()                          # admits 'live' (1 slot/row)
+        t[0] = 100.0
+        stats = engine.step()
+        assert stats["evicted"] == 1
+        assert stale.status is Status.EVICTED and stale.tokens == []
+        assert seen == [Status.EVICTED]        # on_finish fired on eviction
+        engine.run()
+        assert live.status is Status.FINISHED and len(live.tokens) == 2
+
+
+def test_slot_pool_double_free_raises(dense_params):
+    """Pool invariants are real exceptions (assert vanishes under -O)."""
+    from repro.serving import DoubleFree, SlotKVPool
+    pool = SlotKVPool(CFG, n_slots=2, max_len=16)
+    slot = pool.alloc()
+    pool.release(slot)
+    with pytest.raises(DoubleFree):
+        pool.release(slot)
+
+
 def test_poisson_trace_deterministic():
     a = poisson_trace(n_requests=5, rate_per_s=2.0, vocab=128, seed=9)
     b = poisson_trace(n_requests=5, rate_per_s=2.0, vocab=128, seed=9)
