@@ -15,7 +15,10 @@ Two scenarios:
    concurrent requests and skips most prefill work (lower TTFT).
 
 Every run also lands in a machine-readable ``BENCH_serving.json``
-(--out) so the perf trajectory is tracked across PRs.
+(--out) so the perf trajectory is tracked across PRs.  Summaries record
+the engine placement (device count, mesh shape) and per-device tok/s;
+``--mesh 1x8`` runs the mesh-native tensor-parallel engine so single- vs
+multi-device results compare on the same schema.
 
 CPU smoke:   python benchmarks/serving_bench.py --smoke
 Full-ish:    python benchmarks/serving_bench.py --requests 64 --rate 4 \
@@ -52,11 +55,13 @@ def bench_cfg(args):
 
 def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
                   max_len=None, n_blocks=None):
+    from repro.launch.mesh import make_serving_mesh
     return ServingEngine(
         cfg, params, n_slots=n_slots or args.slots,
         max_len=max_len or args.max_len, max_queue=args.max_queue,
         max_prefill_per_step=args.max_prefill_per_step,
-        kv_layout=kv_layout, block_size=args.block_size, n_blocks=n_blocks)
+        kv_layout=kv_layout, block_size=args.block_size, n_blocks=n_blocks,
+        mesh=make_serving_mesh(args.mesh))
 
 
 def _warm_and_replay(engine, trace, time_scale) -> dict:
@@ -82,6 +87,10 @@ def _warm_and_replay(engine, trace, time_scale) -> dict:
     summary = summarize([r.metrics for r in res["finished"]], res["wall_s"])
     summary["rejected"] = res["rejected"]
     summary.update(engine.stats())
+    # engine.stats() carries placement (device count + mesh shape); add the
+    # per-device rate so single- vs multi-device runs compare directly
+    summary["tok_per_s_per_device"] = (
+        summary["tok_per_s"] / max(summary["placement"]["devices"], 1))
     return summary
 
 
@@ -153,6 +162,10 @@ def main(argv=None):
     ap.add_argument("--kv-layout", default="both",
                     choices=("slot", "paged", "both"))
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh 'DATAxMODEL' (e.g. '1x8') — "
+                         "mesh-native tensor-parallel engine; default: "
+                         "single device")
     ap.add_argument("--weight-pattern", default="8:16")
     ap.add_argument("--outlier-pattern", default="16:256")
     ap.add_argument("--seed", type=int, default=0)
@@ -227,7 +240,9 @@ def main(argv=None):
                      "weight_pattern": args.weight_pattern,
                      "outlier_pattern": args.outlier_pattern,
                      "seed": args.seed, "timestamp": time.time(),
-                     "backend": jax.default_backend()},
+                     "backend": jax.default_backend(),
+                     "visible_devices": jax.device_count(),
+                     "mesh": args.mesh},
             "poisson": results,
             "shared_prefix": shared,
         }

@@ -23,6 +23,45 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def parse_mesh_spec(spec: str | None) -> tuple[int, int] | None:
+    """CLI mesh spec -> (data, model) sizes.
+
+    ``"1x8"`` -> (1, 8); a bare ``"8"`` means model-only TP, i.e. (1, 8);
+    None/"" -> None (no mesh: the single-device serving path)."""
+    if spec is None or spec == "" or spec.lower() == "none":
+        return None
+    parts = spec.lower().split("x")
+    try:
+        if len(parts) == 1:
+            dm = 1, int(parts[0])
+        elif len(parts) == 2:
+            dm = int(parts[0]), int(parts[1])
+        else:
+            dm = None
+    except ValueError:
+        dm = None
+    if dm is None or dm[0] < 1 or dm[1] < 1:
+        raise ValueError(f"mesh spec must be positive sizes like '1x8' or "
+                         f"'8', got {spec!r}")
+    return dm
+
+
+def make_serving_mesh(spec: str | None):
+    """Build the serving ("data", "model") mesh named by a CLI spec over
+    the locally visible devices; None when no mesh is requested."""
+    dm = parse_mesh_spec(spec)
+    if dm is None:
+        return None
+    d, m = dm
+    n_dev = len(jax.devices())
+    if d * m > n_dev:
+        raise ValueError(
+            f"mesh {d}x{m} needs {d * m} devices but only {n_dev} are "
+            f"visible (CPU: set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={d * m} before the first jax import)")
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
 # TPU v5e hardware constants (roofline):
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip

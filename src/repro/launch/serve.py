@@ -19,6 +19,12 @@ paged block pool (serving/paged/): block-granular allocation, prefix-cache
 sharing of identical prompt prefixes, preempt-to-queue under KV pressure.
 Token-identical to ``--kv-layout slot`` for the same requests and seeds.
 
+``--mesh 1x8`` serves mesh-native (serving/placement.py): compressed (and
+dense) weights tensor-parallel over the "model" axis, KV arenas sharded by
+head, explicit shardings on every jitted step.  Token-identical to the
+single-device engine.  On CPU, force host devices first:
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch llama-paper-smoke \
       --batch 4 --prompt-len 32 --gen 16 --sparse
@@ -91,11 +97,16 @@ def run_oneshot(cfg, zoo, params, key, args):
 
 
 def _engine_kwargs(args) -> dict:
+    from .mesh import make_serving_mesh
+    mesh = make_serving_mesh(args.mesh)
+    if mesh is not None:
+        print(f"serving mesh: {dict(mesh.shape)} "
+              f"({mesh.devices.size} devices, {jax.default_backend()})")
     return dict(n_slots=args.slots, max_queue=args.max_queue,
                 max_prefill_per_step=args.max_prefill_per_step,
                 kv_layout=args.kv_layout, block_size=args.block_size,
                 n_blocks=args.n_blocks,
-                prefix_caching=not args.no_prefix_cache)
+                prefix_caching=not args.no_prefix_cache, mesh=mesh)
 
 
 def run_engine(cfg, params, key, args):
@@ -153,6 +164,11 @@ def main(argv=None):
                     help="engine KV-pool slots (concurrent requests)")
     ap.add_argument("--kv-layout", default="slot", choices=("slot", "paged"),
                     help="contiguous per-slot KV vs paged block pool")
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh 'DATAxMODEL' (e.g. '1x8'; bare '8' = "
+                         "model-only TP) — tensor-parallel compressed "
+                         "forward + sharded KV arenas; default: no mesh "
+                         "(single device)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (paged layout)")
     ap.add_argument("--n-blocks", type=int, default=None,

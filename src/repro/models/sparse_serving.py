@@ -59,12 +59,12 @@ class SparseWeight:
         return (*self.nm_values.shape[:-1], self.in_dim)
 
     def deployed_bytes(self) -> int:
-        total = sum(v.size * v.dtype.itemsize
-                    for v in (self.nm_values, self.nm_meta) if v is not None)
-        for v in (self.o_values, self.o_meta):
-            if v is not None:
-                total += v.size * v.dtype.itemsize
-        return total
+        """Bytes this container actually ships to HBM — every deployed
+        buffer counts, including the per-row f32 scales of int8 mode
+        (omitting v_scale overstated the int8 compression ratio)."""
+        return sum(v.size * v.dtype.itemsize
+                   for v in (self.nm_values, self.nm_meta, self.o_values,
+                             self.o_meta, self.v_scale) if v is not None)
 
 
 def _unpack_8bit(meta: jax.Array, n: int) -> jax.Array:

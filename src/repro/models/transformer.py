@@ -14,6 +14,12 @@ Three entry points per the launch contract:
   loss_fn(params, batch, cfg)                          — training
   prefill(params, batch, cfg) -> (logits, caches)      — inference prefill
   decode_step(params, caches, batch, cfg) -> (logits, caches)
+
+Sharding: the forward/decode paths are placement-agnostic.  Training and
+the dry-run shard through the activation policy (parallel/policy.py, a
+no-op when inactive); the serving engine instead commits params and KV
+arenas to explicit NamedShardings (serving/placement.py) and lets GSPMD
+propagate, so the same code serves single-device and tensor-parallel.
 """
 from __future__ import annotations
 
@@ -153,6 +159,7 @@ def block_decode(lp, x, k_cache, v_cache, pos, cfg):
     else:
         positions = base
     q, k, v = _project_qkv(lp, h, cfg, positions)
+    q = pol.shard(q, ("fsdp", None, "model", None))
     if per_slot:
         upd = lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(c, u, p, 0)
         k_cache = jax.vmap(upd)(k_cache, k.astype(k_cache.dtype), pos)
@@ -197,6 +204,7 @@ def block_decode_paged(lp, x, k_arena, v_arena, block_tables, pos, cfg,
     else:
         positions = base
     q, k, v = _project_qkv(lp, h, cfg, positions)
+    q = pol.shard(q, ("fsdp", None, "model", None))
     # write: flat token slot of position p is bt[b, p // bs] * bs + p % bs
     slot = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
                                axis=1)[:, 0] * bs + pos % bs       # [B]

@@ -38,6 +38,25 @@ def activation_sharding(mesh: Mesh, seq_shard: bool = False):
         _STATE.policy = prev
 
 
+@contextlib.contextmanager
+def suspended():
+    """Deactivate any ambient policy for code traced within this context.
+
+    The serving placement layer (serving/placement.py) shards through
+    explicit jit in/out shardings instead of activation constraints, and it
+    must NOT inherit a policy leaked from an enclosing dryrun/train scope:
+    an active policy flips MoE onto the capacity-bounded expert-parallel
+    path (models/moe.py), where prefill bucket padding competes with real
+    tokens for expert capacity and token streams stop being batch-invariant.
+    """
+    prev = _current()
+    _STATE.policy = None
+    try:
+        yield
+    finally:
+        _STATE.policy = prev
+
+
 def _resolve(mesh, fsdp, axes, shape):
     spec = []
     for dim, ax in zip(shape, axes):

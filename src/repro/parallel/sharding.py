@@ -17,6 +17,7 @@ alignment (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import re
 from typing import Any
@@ -87,6 +88,11 @@ def param_spec(mesh: Mesh, path: str, shape) -> P:
             return _spec(mesh, shape, (None, fs, "model", None))
         return _spec(mesh, shape, (None, None, "model", fs))
     # ---- compressed SparseWeight buffers (models/sparse_serving.py) --------
+    # Name-only fallback for contexts that flatten a SparseWeight without its
+    # container (e.g. ShapeDtypeStruct sweeps).  It cannot see n/m/o_n, so it
+    # checks raw divisibility only; ``param_shardings`` intercepts real
+    # SparseWeight containers and routes them through ``sparse_weight_specs``,
+    # which enforces N:M-block and outlier-group alignment.
     if re.search(r"nm_values|nm_meta", p):       # [L, out, X]
         if shape[-1] % axis_size(mesh, fs) == 0:
             return tail("model", fs)
@@ -97,6 +103,8 @@ def param_spec(mesh: Mesh, path: str, shape) -> P:
         if shape[-2] % axis_size(mesh, fs) == 0:
             return _spec(mesh, shape, (None,) * (nd - 3) + ("model", fs, None))
         return _spec(mesh, shape, (None,) * (nd - 3) + (("model",) + fs, None, None))
+    if re.search(r"v_scale", p):                 # [L, out] int8 row scales
+        return tail("model")
     # ---- column-parallel: out dim = heads*hd / ff / gates ------------------
     if re.search(r"wq|wk|wv|w_gate|w_up|ws_gate|ws_up|in_proj|w_q|w_k|w_v|"
                  r"w_gates|w_slstm|c_wq|c_wk|c_wv", p):
@@ -106,6 +114,70 @@ def param_spec(mesh: Mesh, path: str, shape) -> P:
         return tail(fs, "model")
     # default: replicate
     return P(*([None] * nd))
+
+
+# --------------------------------------------------------------------------
+# compressed SparseWeight containers
+# --------------------------------------------------------------------------
+
+def sparse_weight_specs(mesh: Mesh, sw, *, serving: bool = False):
+    """Co-designed PartitionSpecs for one ``SparseWeight`` container.
+
+    Returns the container with every array field replaced by its
+    PartitionSpec (``None`` fields stay ``None``), so the result can feed
+    ``jax.device_put`` / ``jit`` sharding trees directly.
+
+    Placement rules (all fields decided together so values, bit-packed
+    metadata, and row scales always co-shard):
+
+      * out (row) dim: sharded over ``model`` whenever divisible — always
+        safe, no compressed structure crosses rows.
+      * in (column) dim: sharded over fsdp ONLY when every shard boundary
+        falls on an N:M block (``m``-wide) AND, when structured outliers
+        exist, on a 256-wide outlier group.  A split block/group would
+        tear bit-packed indices away from the values they address, so
+        misaligned in-dims fall back to replication (or fold fsdp into
+        the out dim when that divides — same escape the name-only rule
+        uses for odd compressed dims).
+      * ``serving=True``: the serving placement never shards contraction
+        dims at all (partial-sum reductions would perturb logits in the
+        last ulp and break token-stream parity with the single-device
+        engine), so in-dims replicate unconditionally.
+    """
+    fs = fsdp_axes(mesh)
+    F = axis_size(mesh, fs)
+    model_n = axis_size(mesh, ("model",))
+    nd = sw.nm_values.ndim
+    lead = (None,) * (nd - 2)
+    out = sw.nm_values.shape[-2]
+    model_ok = out % model_n == 0
+    in_ok = (not serving and F > 1 and sw.in_dim % (F * sw.m) == 0
+             and (sw.o_n == 0 or sw.in_dim % (F * 256) == 0))
+    out_axes = "model" if model_ok else None
+    in_axes = fs if in_ok else None
+    if not serving and not in_ok and out % (model_n * F) == 0:
+        # in-dim not block-aligned: fold fsdp into the out dim rather than
+        # replicating multi-GiB value/metadata buffers
+        out_axes = ("model",) + fs
+    two_d = P(*lead, out_axes, in_axes)          # nm_values / nm_meta
+    o_spec = P(*lead, out_axes, in_axes, None)   # o_values / o_meta
+    return dataclasses.replace(
+        sw, nm_values=two_d, nm_meta=two_d,
+        o_values=None if sw.o_values is None else o_spec,
+        o_meta=None if sw.o_meta is None else o_spec,
+        v_scale=None if sw.v_scale is None else P(*lead, out_axes))
+
+
+def _is_sparse_weight(x) -> bool:
+    from ..models.sparse_serving import SparseWeight
+    return isinstance(x, SparseWeight)
+
+
+def sparse_weight_shardings(mesh: Mesh, sw, *, serving: bool = False):
+    """``sparse_weight_specs`` with every spec wrapped in a NamedSharding."""
+    specs = sparse_weight_specs(mesh, sw, serving=serving)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
 
 
 def tree_paths(tree) -> list[tuple[str, Any]]:
@@ -118,11 +190,18 @@ def tree_paths(tree) -> list[tuple[str, Any]]:
 
 
 def param_shardings(mesh: Mesh, params) -> Any:
-    """NamedSharding pytree mirroring ``params`` (works on ShapeDtypeStructs)."""
+    """NamedSharding pytree mirroring ``params`` (works on ShapeDtypeStructs).
+
+    ``SparseWeight`` containers are intercepted whole so their values,
+    metadata, and scales co-shard under the alignment-checked rules of
+    ``sparse_weight_specs``; plain leaves go through ``param_spec``."""
     def one(path, leaf):
+        if _is_sparse_weight(leaf):
+            return sparse_weight_shardings(mesh, leaf)
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         return NamedSharding(mesh, param_spec(mesh, name, leaf.shape))
-    return jax.tree_util.tree_map_with_path(one, params)
+    return jax.tree_util.tree_map_with_path(one, params,
+                                            is_leaf=_is_sparse_weight)
 
 
 # --------------------------------------------------------------------------

@@ -9,6 +9,8 @@ prefill/decode scheduling, per-request sampling + streaming callbacks).
 ``kv_layout="slot"`` reserves a contiguous max_len KV region per request;
 ``kv_layout="paged"`` allocates block_size-token blocks on demand with
 prefix sharing and preempt-to-queue under memory pressure (serving/paged/).
+``mesh=`` makes the engine tensor-parallel through the serving placement
+layer (serving/placement.py) — token-identical to the single-device path.
 
 Dense params and SparseWeight compressed params (the paper's 8:16 +
 structured-outlier deployment) are served by the same engine.
@@ -18,6 +20,7 @@ from .cache_pool import (CachePoolError, CapacityError, DoubleFree,
                          KVCachePool, SlotKVPool)
 from .engine import KV_LAYOUTS, ServingEngine, SUPPORTED_FAMILIES
 from .paged import OutOfBlocks, PagedKVPool
+from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .scheduler import QueueFull, RequestQueue
 from .trace import (TraceRequest, load_trace, poisson_trace, replay,

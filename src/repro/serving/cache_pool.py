@@ -68,12 +68,16 @@ def _install(pool, kv, slots):
 
 
 class SlotKVPool:
-    def __init__(self, cfg, n_slots: int, max_len: int):
+    def __init__(self, cfg, n_slots: int, max_len: int, placement=None):
+        from .placement import ServingPlacement
+        pl = placement or ServingPlacement()
         L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         shape = (L, n_slots, max_len, KV, hd)
-        self.k = jnp.zeros(shape, cfg.dtype)
-        self.v = jnp.zeros(shape, cfg.dtype)
-        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        # arenas are committed to the placement's KV-head-sharded layout at
+        # birth; the jitted decode then updates them shard-local in place
+        self.k = pl.place_kv(jnp.zeros(shape, cfg.dtype))
+        self.v = pl.place_kv(jnp.zeros(shape, cfg.dtype))
+        self.pos = pl.place_replicated(jnp.zeros((n_slots,), jnp.int32))
         self.n_slots = n_slots
         self.max_len = max_len
         self._free = list(range(n_slots - 1, -1, -1))   # pop() -> ascending

@@ -39,13 +39,22 @@ in launch/serve.py.
 Prefill batching: admitted prompts are padded to power-of-two length buckets
 and grouped, so the number of distinct compiled prefill shapes stays small
 under mixed prompt lengths.  With causal attention the bucket padding
-(after the prompt) cannot influence prompt logits or KV on the single-host
-path this engine runs today — including MoE, whose local routing is
-capacity-free (models/moe.py _moe_local).  A sharded engine on the
-production mesh would route through the capacity-BOUNDED expert-parallel
-path, where pad tokens compete for expert capacity and can perturb real
-tokens; padding must be masked out of routing before that lands (see
-ROADMAP open items).
+(after the prompt) cannot influence prompt logits or KV — including MoE,
+whose local routing is capacity-free (models/moe.py _moe_local).  The
+engine's traced functions run under ``policy.suspended()`` precisely to
+keep that path on every mesh: an active activation-sharding policy would
+flip MoE to the capacity-BOUNDED expert-parallel route, where pad tokens
+compete with real tokens for expert capacity.
+
+Mesh-native serving (``mesh=``): pass a ``("data", "model")`` mesh and the
+engine becomes tensor-parallel end to end through one placement layer
+(serving/placement.py): params — dense and SparseWeight compressed buffers
+alike — are committed out-dim-sharded over "model", both KV layouts shard
+their arenas' KV-head dim, and every jitted prefill/decode function carries
+explicit in/out shardings.  Block tables, the prefix cache, and all
+scheduling state stay host-side and layout-agnostic.  Token streams are
+identical to the single-device engine (tests/test_mesh_serving.py); with no
+mesh (default) nothing changes from the single-device behavior.
 """
 from __future__ import annotations
 
@@ -56,8 +65,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer as tfm
+from ..parallel import policy as pol
 from .cache_pool import CachePoolError, SlotKVPool
 from .paged import OutOfBlocks, PagedKVPool
+from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .sampling import sample_tokens
 from .scheduler import (QueueFull, RequestQueue, admission_budget,
@@ -80,7 +91,7 @@ class ServingEngine:
                  max_prefill_per_step: int = 2, kv_layout: str = "slot",
                  block_size: int = 16, n_blocks: int | None = None,
                  prefix_caching: bool = True, lookahead_blocks: int = 1,
-                 paged_attn_backend: str | None = None,
+                 paged_attn_backend: str | None = None, mesh=None,
                  clock=time.monotonic):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
@@ -90,14 +101,20 @@ class ServingEngine:
             raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
                              f"not {kv_layout!r}")
         self.cfg = cfg
-        self.params = params
+        self.placement = ServingPlacement(mesh, cfg)
+        # one sharding-tree walk serves both the initial device_put and the
+        # jitted functions' explicit in_shardings below
+        psh = self.placement.param_shardings(params)
+        self.params = params if psh is None else jax.device_put(params, psh)
         self.kv_layout = kv_layout
         if kv_layout == "paged":
             self.pool = PagedKVPool(cfg, n_slots, max_len,
                                     block_size=block_size, n_blocks=n_blocks,
-                                    prefix_caching=prefix_caching)
+                                    prefix_caching=prefix_caching,
+                                    placement=self.placement)
         else:
-            self.pool = SlotKVPool(cfg, n_slots, max_len)
+            self.pool = SlotKVPool(cfg, n_slots, max_len,
+                                   placement=self.placement)
         self.queue = RequestQueue(max_queue, queue_timeout_s)
         self.max_prefill_per_step = max_prefill_per_step
         self.lookahead_blocks = lookahead_blocks
@@ -117,26 +134,56 @@ class ServingEngine:
         self._last_token = np.zeros((n_slots,), np.int32)
         # logits of each slot's most recent position (prefill scatters here
         # so first-token sampling reuses the one slot-wide sampler)
-        self._slot_logits = jnp.zeros((n_slots, cfg.vocab), jnp.float32)
+        self._slot_logits = self.placement.place_replicated(
+            jnp.zeros((n_slots, cfg.vocab), jnp.float32))
 
-        self._prefill_fn = jax.jit(
-            lambda p, t: tfm.forward(p, {"tokens": t}, cfg, collect_kv=True))
+        # Every traced function is wrapped in policy.suspended() so an
+        # ambient activation-sharding policy can't leak into serving traces
+        # (it would flip MoE to the capacity-bounded path — module docstring).
+        def suspend(fn):
+            def traced(*args):
+                with pol.suspended():
+                    return fn(*args)
+            return traced
+
+        pl = self.placement
+
+        def jit(fn, in_sh=None, out_sh=None, donate=()):
+            """jit with the placement's explicit in/out shardings; a plain
+            single-device jit when no mesh is set (today's behavior)."""
+            if not pl.active:
+                return jax.jit(suspend(fn), donate_argnums=donate)
+            return jax.jit(suspend(fn), in_shardings=in_sh,
+                           out_shardings=out_sh, donate_argnums=donate)
+
+        rep, kvsh = pl.replicated, pl.kv
+        self._prefill_fn = jit(
+            lambda p, t: tfm.forward(p, {"tokens": t}, cfg, collect_kv=True),
+            in_sh=(psh, rep), out_sh=(rep, (kvsh, kvsh)))
         # suffix prefill against gathered prefix KV (paged prefix-cache
         # hits); retraces once per (prefix_len, bucket) shape pair
-        self._prefix_prefill_fn = jax.jit(
+        self._prefix_prefill_fn = jit(
             lambda p, t, pk, pv: tfm.forward_with_prefix(
-                p, {"tokens": t}, cfg, pk, pv))
+                p, {"tokens": t}, cfg, pk, pv),
+            in_sh=(psh, rep, kvsh, kvsh), out_sh=(rep, (kvsh, kvsh)))
         # k/v are donated: the pool adopts the step's output buffers, so the
         # multi-GB caches update in place instead of being copied every token
-        self._decode_fn = jax.jit(
+        # (cache out shardings == in shardings, so donation stays in place
+        # shard-for-shard on the mesh)
+        self._decode_fn = jit(
             lambda p, k, v, pos, t: tfm.decode_step(
                 p, {"k": k, "v": v, "pos": pos}, {"tokens": t}, cfg),
-            donate_argnums=(1, 2))
-        self._decode_paged_fn = jax.jit(
+            in_sh=(psh, kvsh, kvsh, rep, rep),
+            out_sh=(rep, {"k": kvsh, "v": kvsh, "pos": rep}),
+            donate=(1, 2))
+        self._decode_paged_fn = jit(
             lambda p, k, v, bt, pos, t: tfm.decode_step_paged(
                 p, {"k": k, "v": v, "block_tables": bt, "pos": pos},
                 {"tokens": t}, cfg, attn_backend=paged_attn_backend),
-            donate_argnums=(1, 2))
+            in_sh=(psh, kvsh, kvsh, rep, rep, rep),
+            out_sh=(rep, {"k": kvsh, "v": kvsh, "block_tables": rep,
+                          "pos": rep}),
+            donate=(1, 2))
 
     # ------------------------------------------------------------ admission
     def submit(self, prompt, sampling: SamplingParams | None = None,
@@ -206,7 +253,8 @@ class ServingEngine:
         """Engine-level counters plus the pool's memory/prefix accounting."""
         out = {"n_steps": self.n_steps, "max_running": self.max_running,
                "n_preemptions": self.n_preemptions,
-               "kv_layout": self.kv_layout}
+               "kv_layout": self.kv_layout,
+               "placement": self.placement.describe()}
         if self.kv_layout == "paged":
             out["pool"] = self.pool.stats()
         return out

@@ -38,13 +38,18 @@ def _copy_block(arena, dst, src):
 
 
 class BlockPool:
-    def __init__(self, cfg, n_blocks: int, block_size: int):
+    def __init__(self, cfg, n_blocks: int, block_size: int, placement=None):
         if n_blocks < 1:
             raise ValueError("need at least one block")
+        from ..placement import ServingPlacement
+        pl = placement or ServingPlacement()
         L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         shape = (L, n_blocks, block_size, KV, hd)
-        self.k = jnp.zeros(shape, cfg.dtype)
-        self.v = jnp.zeros(shape, cfg.dtype)
+        # the one shared arena is committed KV-head-sharded on the serving
+        # mesh (serving/placement.py); refcounts and the free list below are
+        # host-side scheduling state and never shard
+        self.k = pl.place_kv(jnp.zeros(shape, cfg.dtype))
+        self.v = pl.place_kv(jnp.zeros(shape, cfg.dtype))
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.ref = np.zeros((n_blocks,), np.int32)

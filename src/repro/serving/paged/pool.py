@@ -49,13 +49,14 @@ def _scatter_tokens(arena, vals, slots):
 class PagedKVPool:
     def __init__(self, cfg, n_rows: int, max_len: int, *,
                  block_size: int = 16, n_blocks: int | None = None,
-                 prefix_caching: bool = True):
+                 prefix_caching: bool = True, placement=None):
         self.block_size = block_size
         self.max_blocks_per_row = blocks_needed(max_len, block_size)
         if n_blocks is None:
             # same HBM as a SlotKVPool(n_rows, max_len) reservation
             n_blocks = n_rows * self.max_blocks_per_row
-        self.blocks = BlockPool(cfg, n_blocks + 1, block_size)  # +1 trash
+        self.blocks = BlockPool(cfg, n_blocks + 1, block_size,
+                                placement=placement)          # +1 trash
         self._trash = self.blocks.alloc()                       # permanent
         self.n_blocks = n_blocks                                # usable
         self.n_rows = n_rows

@@ -1,0 +1,176 @@
+"""Serving placement: ONE layer that decides where every serving buffer lives.
+
+``ServingPlacement`` owns the mapping from serving-side pytrees — model
+params (dense arrays and ``SparseWeight`` compressed containers alike),
+both KV layouts' device arenas, logits, and the small host-shipped vectors
+(tokens, positions, block tables) — to ``NamedSharding``s on a caller-
+supplied ``("data", "model")`` mesh.  The engine builds its jitted
+prefill/prefix-prefill/decode/decode-paged functions against these
+shardings; the pools allocate their arenas through them.  With no mesh
+(the default) every hook is an identity/None and the engine behaves
+exactly as the single-device path always has.
+
+Placement policy — deliberately different from the training rules in
+``parallel/sharding.py``:
+
+  * **Out-dim ("model") tensor parallelism only.**  Projection weights
+    shard their output rows; contraction (input) dims stay whole on every
+    device.  A split contraction turns one dot product into partial sums
+    combined by an all-reduce, whose different summation order perturbs
+    logits in the last ulp — out-dim sharding keeps every output element
+    the same full-length dot product the single-device engine computes,
+    which is what makes sharded token streams match the unsharded engine
+    exactly (the tentpole parity property, asserted in
+    tests/test_mesh_serving.py).
+  * **SparseWeight containers shard as one unit.**  ``nm_values`` /
+    ``nm_meta`` / ``o_values`` / ``o_meta`` / ``v_scale`` co-shard along
+    the out (row) dim via ``parallel.sharding.sparse_weight_specs`` — the
+    compressed bytes (1.30 B/elem for 8:16 + 16:256 outliers) are what
+    lands in each shard's HBM.  In-dim sharding is only ever legal on
+    N:M-block / 256-wide outlier-group boundaries and the serving policy
+    doesn't use it at all (see above).
+  * **KV arenas shard the KV-head dim over "model"** — the slot pool's
+    ``[L, slots, max_len, KV, hd]`` buffers and the paged
+    ``[L, n_blocks, block_size, KV, hd]`` arena use the same spec, so
+    decode attention is head-local on every shard.  Block tables, the
+    prefix cache, free lists, and refcounts stay host-side numpy —
+    placement-agnostic scheduling state, never sharded.
+  * **The activation-sharding policy (parallel/policy.py) is NOT
+    activated.**  Beyond being unnecessary (GSPMD propagates the weight
+    shardings), an active policy flips MoE onto the capacity-bounded
+    expert-parallel path where prefill bucket padding can evict real
+    tokens; the engine's traced functions run under ``policy.suspended()``
+    to keep the exact capacity-free routing on every mesh.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# out-dim-sharded projections ([*, out, in] layout) and embeddings/head
+_PROJ = re.compile(r"wq|wk|wv|wo|w_gate|w_up|w_down|ws_gate|ws_up|ws_down|"
+                   r"in_proj|out_proj|w_q|w_k|w_v|c_wq|c_wk|c_wv|c_wo")
+_EMBED = re.compile(r"embed|lm_head")
+_EXPERT = re.compile(r"we_(gate|up|down)")       # [L, E, in, out] layout
+
+
+class ServingPlacement:
+    """Placement decisions for one engine instance.
+
+    ``mesh=None`` (default) disables placement entirely: ``active`` is
+    False, every ``place_*`` hook returns its input unchanged, and every
+    sharding accessor returns ``None`` — the engine then builds plain
+    single-device jits, preserving the pre-mesh behavior bit for bit.
+    """
+
+    def __init__(self, mesh: Mesh | None = None, cfg=None):
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(f"serving mesh needs a 'model' axis, got "
+                                 f"{mesh.axis_names}")
+            extra = {a: int(s) for a, s in mesh.shape.items()
+                     if a != "model" and int(s) > 1}
+            if extra:
+                # only model-axis TP is placed today; >1 on any other axis
+                # would run fully redundant replicas and silently skew
+                # per-device throughput accounting (data-axis serving
+                # parallelism is a ROADMAP open item)
+                raise ValueError(
+                    f"serving placement shards over 'model' only; non-model "
+                    f"mesh axes must be size 1, got {extra}")
+            if cfg is None:
+                raise ValueError("a mesh placement needs the model cfg "
+                                 "(KV-head divisibility)")
+        self.mesh = mesh
+        self.cfg = cfg
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    # ------------------------------------------------------------- shardings
+    @property
+    def replicated(self) -> NamedSharding | None:
+        """For host-shipped vectors: tokens, positions, block tables,
+        sampling logits — every device sees the whole (small) array."""
+        if not self.active:
+            return None
+        return NamedSharding(self.mesh, P())
+
+    @property
+    def kv(self) -> NamedSharding | None:
+        """One spec for every ``[L, X, tokens, KV, hd]`` KV buffer — the
+        slot pool (X=slots), the paged arena (X=blocks), and prefill /
+        prefix-gather outputs (X=batch).  Heads over "model" when they
+        divide; a GQA model with fewer KV heads than the axis replicates
+        (correct, just not distributed — flash-decoding-style sequence
+        sharding is the roadmap item for that regime)."""
+        if not self.active:
+            return None
+        axes = "model" if self.cfg.n_kv_heads % self.mesh.shape["model"] == 0 \
+            else None
+        return NamedSharding(self.mesh, P(None, None, None, axes, None))
+
+    def _dense_spec(self, name: str, shape) -> P:
+        model_n = self.mesh.shape["model"]
+        nd = len(shape)
+        leaf = name.lower().rsplit("/", 1)[-1]
+
+        def over_model(dim_idx):
+            axes = [None] * nd
+            if shape[dim_idx] % model_n == 0:
+                axes[dim_idx] = "model"
+            return P(*axes)
+
+        if nd >= 2 and _EMBED.search(leaf):
+            return over_model(0)                 # [vocab, d]: rows of vocab
+        if _EXPERT.search(leaf):
+            return over_model(nd - 1)            # [L, E, in, out]: out last
+        if nd >= 2 and _PROJ.search(leaf):
+            return over_model(nd - 2)            # [*, out, in]: out rows
+        return P(*([None] * nd))                 # norms / router / scalars
+
+    def param_shardings(self, params):
+        """Serving-policy NamedSharding pytree mirroring ``params``,
+        SparseWeight containers included (None when no mesh)."""
+        if not self.active:
+            return None
+        from ..models.sparse_serving import SparseWeight
+        from ..parallel.sharding import sparse_weight_shardings
+
+        def one(path, leaf):
+            if isinstance(leaf, SparseWeight):
+                return sparse_weight_shardings(self.mesh, leaf, serving=True)
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            return NamedSharding(self.mesh, self._dense_spec(name, leaf.shape))
+        return jax.tree_util.tree_map_with_path(
+            one, params, is_leaf=lambda x: isinstance(x, SparseWeight))
+
+    # ------------------------------------------------------------ placement
+    def place_params(self, params):
+        """Commit the (possibly compressed) param pytree to the mesh."""
+        if not self.active:
+            return params
+        return jax.device_put(params, self.param_shardings(params))
+
+    def place_kv(self, arr):
+        """Commit a KV arena/pool buffer to its head-sharded layout."""
+        if not self.active:
+            return arr
+        return jax.device_put(arr, self.kv)
+
+    def place_replicated(self, arr):
+        if not self.active:
+            return arr
+        return jax.device_put(arr, self.replicated)
+
+    # ------------------------------------------------------------- metadata
+    def describe(self) -> dict:
+        """Benchmark/metrics-facing summary (BENCH_serving.json schema)."""
+        if not self.active:
+            return {"devices": 1, "mesh": None}
+        return {"devices": int(self.mesh.devices.size),
+                "mesh": {k: int(v) for k, v in self.mesh.shape.items()}}

@@ -160,3 +160,16 @@ class TestQuantizedSparse:
         sw = _to_sparse_weight(w, cfg, quantize=True)
         assert sw.nm_values.dtype == jnp.int8
         assert sw.o_values.dtype == w.dtype          # outliers uncompressed
+
+    def test_deployed_bytes_counts_v_scale(self):
+        """Regression: int8 mode must bill the per-row f32 scales too, or
+        benchmark compression ratios overstate the int8 savings."""
+        from repro.models.sparse_serving import _to_sparse_weight
+        w = jax.random.normal(jax.random.PRNGKey(3), (64, 512))
+        cfg = SparsifyConfig(scorer="magnitude", use_smoothquant=False)
+        sw = _to_sparse_weight(w, cfg, quantize=True)
+        without_scale = sum(
+            v.size * v.dtype.itemsize
+            for v in (sw.nm_values, sw.nm_meta, sw.o_values, sw.o_meta))
+        assert sw.v_scale is not None
+        assert sw.deployed_bytes() == without_scale + sw.v_scale.size * 4

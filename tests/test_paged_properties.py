@@ -1,0 +1,142 @@
+"""Property tests: PrefixCache + BlockPool accounting invariants.
+
+A seeded random walk over the paged pool's public lifecycle (admit with
+prefix matching, release, LRU evict, decode-step block growth) checks
+after EVERY operation that
+
+  * refcounts are never negative and exactly equal the ground truth
+    (one ref per block-table entry + one per prefix-cache entry + the
+    permanent trash ref),
+  * the free list and live references partition the arena (no block is
+    simultaneously free and referenced, no duplicate free entries),
+  * LRU eviction never frees a block a live request still references,
+  * the O(1) evictability counter matches a full rescan,
+  * copy-on-write hands back a private block with identical contents.
+
+Uses ``hypothesis`` when installed, else the deterministic fallback sweep
+(tests/hypothesis_fallback.py) — same property, seeded draws.
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                               # pragma: no cover
+    from hypothesis_fallback import given, settings, st
+
+from repro import configs
+from repro.serving.paged import BlockPool, OutOfBlocks, PagedKVPool
+
+CFG = dataclasses.replace(configs.get_smoke("llama-paper"),
+                          name="paged-prop-test", n_layers=1, d_model=32,
+                          n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                          vocab=64, remat=False)
+BS = 4                                            # tiny blocks -> pressure
+
+
+def _check_invariants(pool: PagedKVPool) -> None:
+    bp = pool.blocks
+    expected = np.zeros((bp.n_blocks,), np.int64)
+    expected[pool._trash] += 1                    # permanent trash ref
+    for t in pool.tables:
+        if t is not None:
+            for b in t.blocks:
+                expected[b] += 1
+    cache = pool.prefix_cache
+    if cache is not None:
+        for b in cache._entries.values():
+            expected[b] += 1
+    assert (bp.ref >= 0).all(), "negative refcount"
+    np.testing.assert_array_equal(np.asarray(bp.ref, np.int64), expected)
+    free = bp._free
+    assert len(free) == len(set(free)), "duplicate free-list entry"
+    assert all(bp.ref[b] == 0 for b in free), "free block still referenced"
+    live = {b for b in range(bp.n_blocks) if bp.ref[b] > 0}
+    assert live.isdisjoint(free)
+    assert len(free) + len(live) == bp.n_blocks   # partition, nothing leaked
+    if cache is not None:
+        rescan = sum(1 for b in cache._entries.values() if bp.ref[b] == 1)
+        assert cache.n_evictable == rescan, "stale O(1) evictability counter"
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pool_lifecycle_invariants_hold(seed):
+    rng = random.Random(seed)
+    pool = PagedKVPool(CFG, n_rows=4, max_len=6 * BS, block_size=BS,
+                       n_blocks=8)
+    active: dict[int, list[int]] = {}             # row -> full token seq
+
+    for _ in range(40):
+        op = rng.choice(("admit", "admit", "release", "evict", "decode"))
+        if op == "admit":
+            # tiny alphabet so identical prefixes (cache hits) are common
+            toks = [rng.randint(0, 2) for _ in
+                    range(rng.randint(1, pool.max_request_tokens))]
+            if pool.can_admit(len(toks)):
+                try:
+                    row, n_cached = pool.admit(toks)
+                except OutOfBlocks:
+                    pass
+                else:
+                    assert 0 <= n_cached < len(toks)
+                    # what write_prefill would record for the full seq
+                    pool._pos_np[row] = len(toks)
+                    pool.register_prefix(row, toks)
+                    active[row] = toks
+        elif op == "release" and active:
+            row = rng.choice(sorted(active))
+            pool.release(row)
+            del active[row]
+        elif op == "evict" and pool.prefix_cache is not None:
+            live = {b for t in pool.tables if t is not None
+                    for b in t.blocks}
+            before = set(pool.blocks._free)
+            if pool.prefix_cache.evict_one():
+                freed = set(pool.blocks._free) - before
+                assert len(freed) == 1
+                assert freed.isdisjoint(live), \
+                    "LRU evicted a block a live request references"
+        elif op == "decode" and active:
+            row = rng.choice(sorted(active))
+            if int(pool._pos_np[row]) < pool.max_request_tokens:
+                try:
+                    pool.prepare_decode([row])
+                except OutOfBlocks:
+                    pass
+                else:
+                    pool._pos_np[row] += 1
+        _check_invariants(pool)
+
+    for row in sorted(active):                    # drain; nothing may leak
+        pool.release(row)
+        _check_invariants(pool)
+    cache = pool.prefix_cache
+    while cache is not None and cache.evict_one():
+        _check_invariants(pool)
+    if cache is not None:
+        assert pool.blocks.n_free == pool.n_blocks   # all but trash free
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_copy_on_write_preserves_contents(seed):
+    rng = random.Random(seed)
+    pool = BlockPool(CFG, n_blocks=4, block_size=BS)
+    src = pool.alloc()
+    kval, vval = rng.uniform(-8, 8), rng.uniform(-8, 8)
+    pool.k = pool.k.at[:, src].set(kval)
+    pool.v = pool.v.at[:, src].set(vval)
+    pool.incref(src)                              # shared: CoW must copy
+    dst = pool.copy_on_write(src)
+    assert dst != src
+    assert pool.ref[src] == 1 and pool.ref[dst] == 1
+    np.testing.assert_array_equal(np.asarray(pool.k[:, dst]),
+                                  np.full_like(np.asarray(pool.k[:, dst]),
+                                               kval))
+    np.testing.assert_array_equal(np.asarray(pool.v[:, dst]),
+                                  np.asarray(pool.v[:, src]))

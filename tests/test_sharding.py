@@ -10,7 +10,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import (param_spec, batch_spec, cache_spec,
-                                     fsdp_axes)
+                                     fsdp_axes, sparse_weight_specs)
 
 
 @pytest.fixture(scope="module")
@@ -51,6 +51,71 @@ class TestParamSpecs:
     def test_router_replicated(self, mesh):
         assert param_spec(mesh, "layers/moe/router", (48, 128, 5120)) == \
             P(None, None, None)
+
+
+def _sw(out, in_dim, m=16, n=8, o_n=0, quantized=False, L=None):
+    """SparseWeight of ShapeDtypeStructs (specs only need shapes+statics)."""
+    from repro.models.sparse_serving import SparseWeight
+    lead = () if L is None else (L,)
+    sds = jax.ShapeDtypeStruct
+    vdt = jnp.int8 if quantized else jnp.bfloat16
+    return SparseWeight(
+        nm_values=sds((*lead, out, in_dim * n // m), vdt),
+        nm_meta=sds((*lead, out, in_dim // m), jnp.int32),
+        o_values=None if o_n == 0 else
+        sds((*lead, out, in_dim // 256, o_n), jnp.bfloat16),
+        o_meta=None if o_n == 0 else
+        sds((*lead, out, in_dim // 256, o_n // 4), jnp.int32),
+        v_scale=None if not quantized else sds((*lead, out), jnp.float32),
+        n=n, m=m, o_n=o_n, in_dim=in_dim)
+
+
+class TestSparseWeightSpecs:
+    """Mesh-aware placement of compressed containers: out-dim (row)
+    sharding is always safe; in-dim sharding must land on N:M-block and
+    256-wide outlier-group boundaries or fall back to replication."""
+
+    def test_aligned_in_dim_shards_over_fsdp(self, mesh):
+        # fsdp=4, m=16: in_dim 256 % (4*16) == 0 -> values+meta in over data
+        sp = sparse_weight_specs(mesh, _sw(64, 256))
+        assert sp.nm_values == P("model", ("data",))
+        assert sp.nm_meta == P("model", ("data",))
+
+    def test_in_dim_splitting_nm_block_replicates(self, mesh):
+        # in_dim 48 is 16-aligned but 48 % (4*16) != 0: a data-shard
+        # boundary would land inside an N:M block.  The raw compressed dim
+        # (48*8/16 = 24) DOES divide 4 — divisibility alone must not win.
+        sp = sparse_weight_specs(mesh, _sw(64, 48))
+        assert sp.nm_values[-1] is None and sp.nm_meta[-1] is None
+        # out dim may absorb fsdp instead (64 % (4*4) == 0)
+        assert sp.nm_values[0] == ("model", "data")
+
+    def test_in_dim_splitting_outlier_group_replicates(self, mesh):
+        # 512 % (4*16) == 0 but 512 % (4*256) != 0: fine without outliers,
+        # rejected with them (a shard edge would cut a 256-wide group)
+        no_outliers = sparse_weight_specs(mesh, _sw(4, 512))
+        assert no_outliers.nm_values[-1] == ("data",)
+        with_outliers = sparse_weight_specs(mesh, _sw(4, 512, o_n=16))
+        assert with_outliers.nm_values[-1] is None
+        assert with_outliers.o_values == P("model", None, None)
+
+    def test_replication_fallback_when_nothing_divides(self, mesh):
+        # out 4 % model(4) == 0 but 4 % (model*fsdp)=16 != 0: no fsdp fold
+        sp = sparse_weight_specs(mesh, _sw(4, 48))
+        assert sp.nm_values == P("model", None)
+
+    def test_metadata_and_scales_coshard_with_values(self, mesh):
+        sp = sparse_weight_specs(mesh, _sw(64, 1024, o_n=16, quantized=True,
+                                           L=2))
+        assert sp.nm_meta == sp.nm_values == P(None, "model", ("data",))
+        assert sp.o_values == sp.o_meta == P(None, "model", ("data",), None)
+        assert sp.v_scale == P(None, "model")     # same out axes
+
+    def test_serving_policy_never_shards_contractions(self, mesh):
+        # serving placement: out-dim TP only (token-stream parity)
+        sp = sparse_weight_specs(mesh, _sw(64, 256, o_n=16), serving=True)
+        assert sp.nm_values == P("model", None)
+        assert sp.o_values == P("model", None, None)
 
 
 class TestBatchCacheSpecs:
