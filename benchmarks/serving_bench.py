@@ -1,7 +1,7 @@
 """Serving benchmark: continuous batching under Poisson arrivals,
 dense vs 8:16(+16:256 outlier) compressed weights, slot vs paged KV.
 
-Two scenarios:
+Three scenarios:
 
 1. Poisson open-loop workload (exponential interarrival gaps) replayed
    through the ServingEngine for each (weights, kv_layout) combination;
@@ -13,6 +13,13 @@ Two scenarios:
    budget/max_len; the paged layout allocates blocks on demand and
    stores the shared prefix KV once (prefix cache), so it admits more
    concurrent requests and skips most prefill work (lower TTFT).
+3. Long-prompt chunked-prefill stress at an EQUAL KV budget: short
+   decode-heavy requests are mid-stream when very long prompts land.
+   One-shot prefill stalls every decoder for the whole prompt (one giant
+   inter-token gap); with ``--token-budget`` the prompt advances in
+   chunks beside the decode batch.  Reports the pooled inter-token
+   latency p99 (the decode-tail stall) and prefill chunk counts for both
+   modes.
 
 Every run also lands in a machine-readable ``BENCH_serving.json``
 (--out) so the perf trajectory is tracked across PRs.  Summaries record
@@ -42,7 +49,8 @@ from repro.models import get_model                             # noqa: E402
 from repro.models.sparse_serving import sparsify_for_serving   # noqa: E402
 from repro.runtime.metrics import format_summary, summarize    # noqa: E402
 from repro.serving import (QueueFull, ServingEngine,           # noqa: E402
-                           TraceRequest, poisson_trace, replay)
+                           TraceRequest, long_prompt_trace, poisson_trace,
+                           replay)
 
 
 def bench_cfg(args):
@@ -54,14 +62,16 @@ def bench_cfg(args):
 
 
 def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
-                  max_len=None, n_blocks=None):
+                  max_len=None, n_blocks=None, token_budget=None,
+                  prefix_caching=True):
     from repro.launch.mesh import make_serving_mesh
     return ServingEngine(
         cfg, params, n_slots=n_slots or args.slots,
         max_len=max_len or args.max_len, max_queue=args.max_queue,
+        token_budget=token_budget or args.token_budget,
         max_prefill_per_step=args.max_prefill_per_step,
         kv_layout=kv_layout, block_size=args.block_size, n_blocks=n_blocks,
-        mesh=make_serving_mesh(args.mesh))
+        prefix_caching=prefix_caching, mesh=make_serving_mesh(args.mesh))
 
 
 def _warm_and_replay(engine, trace, time_scale) -> dict:
@@ -143,6 +153,43 @@ def shared_prefix_scenario(cfg, params, args) -> dict:
     return out
 
 
+def long_prompt_scenario(cfg, params, args) -> dict:
+    """Short decode-heavy requests mid-stream when long prompts land:
+    one-shot prefill vs token-budget chunked prefill at an EQUAL KV
+    budget (same arena, rows, and requests; only the step policy moves).
+    The metric that matters is the pooled inter-token-latency p99 — the
+    worst stall a decoding request observes."""
+    max_len = args.long_len + args.gen
+    trace = long_prompt_trace(
+        n_short=args.long_short_requests, short_len=args.tail_len,
+        gen_short=args.gen * 2, n_long=args.long_requests,
+        long_len=args.long_len, gen_long=args.gen,
+        vocab=cfg.vocab, seed=args.seed + 2)
+    budget = args.token_budget or max(args.long_len // 4, 32)
+    out = {"token_budget": budget, "long_len": args.long_len,
+           "n_short": args.long_short_requests,
+           "n_long": args.long_requests}
+    # one-shot = a budget no prompt exceeds: the whole prompt lands in one
+    # chunk, reproducing the pre-chunking schedule under identical memory.
+    # Prefix caching is off so the measured pass repeats the warmed-up
+    # prefill work instead of hitting KV the warm passes left behind —
+    # the scenario measures prefill *scheduling*, not caching.
+    for mode, tb in (("oneshot", 2 * max_len), ("chunked", budget)):
+        engine = _build_engine(cfg, params, args, "paged",
+                               n_slots=args.slots, max_len=max_len,
+                               n_blocks=2 * max_len // args.block_size,
+                               token_budget=tb, prefix_caching=False)
+        summary = _warm_and_replay(engine, trace, args.time_scale)
+        print(format_summary(f"long/{mode}", summary))
+        out[mode] = summary
+    o, c = out["oneshot"], out["chunked"]
+    print(f"long-prompt @ budget {budget} tok/step: itl p99 "
+          f"oneshot={o['itl']['p99']*1e3:.1f}ms vs "
+          f"chunked={c['itl']['p99']*1e3:.1f}ms; chunks max "
+          f"{o['prefill_chunks']['max']} vs {c['prefill_chunks']['max']}")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-paper")
@@ -157,7 +204,11 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-queue", type=int, default=64)
-    ap.add_argument("--max-prefill-per-step", type=int, default=2)
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="prefill tokens per engine step (chunked prefill); "
+                         "default: engine default (effectively un-chunked)")
+    ap.add_argument("--max-prefill-per-step", type=int, default=None,
+                    help="DEPRECATED request-count spelling of --token-budget")
     ap.add_argument("--time-scale", type=float, default=1.0)
     ap.add_argument("--kv-layout", default="both",
                     choices=("slot", "paged", "both"))
@@ -178,6 +229,13 @@ def main(argv=None):
     ap.add_argument("--kv-budget-tokens", type=int, default=None,
                     help="KV budget for the shared-prefix comparison "
                          "(default: slots * max_len)")
+    # long-prompt chunked-prefill scenario
+    ap.add_argument("--no-long-prompt", action="store_true",
+                    help="skip the long-prompt chunked-prefill scenario")
+    ap.add_argument("--long-requests", type=int, default=2)
+    ap.add_argument("--long-short-requests", type=int, default=6)
+    ap.add_argument("--long-len", type=int, default=256,
+                    help="long-prompt length for the chunked scenario")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="machine-readable results file ('' to skip)")
     args = ap.parse_args(argv)
@@ -191,6 +249,9 @@ def main(argv=None):
         args.shared_requests = min(args.shared_requests, 10)
         args.sys_len = min(args.sys_len, 40)
         args.tail_len = min(args.tail_len, 8)
+        args.long_len = min(args.long_len, 128)
+        args.long_requests = min(args.long_requests, 1)
+        args.long_short_requests = min(args.long_short_requests, 4)
 
     cfg = bench_cfg(args)
     zoo = get_model(cfg)
@@ -230,6 +291,10 @@ def main(argv=None):
     if not args.no_shared_prefix:
         shared = shared_prefix_scenario(cfg, params, args)
 
+    long_prompt = None
+    if not args.no_long_prompt:
+        long_prompt = long_prompt_scenario(cfg, params, args)
+
     if args.out:
         payload = {
             "meta": {"model": cfg.name, "family": cfg.family,
@@ -237,6 +302,7 @@ def main(argv=None):
                      "rate_per_s": args.rate, "gen": args.gen,
                      "slots": args.slots, "max_len": args.max_len,
                      "block_size": args.block_size,
+                     "token_budget": args.token_budget,
                      "weight_pattern": args.weight_pattern,
                      "outlier_pattern": args.outlier_pattern,
                      "seed": args.seed, "timestamp": time.time(),
@@ -245,6 +311,7 @@ def main(argv=None):
                      "mesh": args.mesh},
             "poisson": results,
             "shared_prefix": shared,
+            "long_prompt": long_prompt,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

@@ -19,6 +19,12 @@ paged block pool (serving/paged/): block-granular allocation, prefix-cache
 sharing of identical prompt prefixes, preempt-to-queue under KV pressure.
 Token-identical to ``--kv-layout slot`` for the same requests and seeds.
 
+``--token-budget N`` bounds the prefill tokens any engine step may spend:
+prompts longer than N advance chunk-by-chunk across steps while everyone
+else keeps decoding (chunked prefill — token-identical to the un-chunked
+engine).  ``--max-prefill-per-step`` is the deprecated request-count
+spelling of the same knob.
+
 ``--mesh 1x8`` serves mesh-native (serving/placement.py): compressed (and
 dense) weights tensor-parallel over the "model" axis, KV arenas sharded by
 head, explicit shardings on every jitted step.  Token-identical to the
@@ -103,6 +109,7 @@ def _engine_kwargs(args) -> dict:
         print(f"serving mesh: {dict(mesh.shape)} "
               f"({mesh.devices.size} devices, {jax.default_backend()})")
     return dict(n_slots=args.slots, max_queue=args.max_queue,
+                token_budget=args.token_budget,
                 max_prefill_per_step=args.max_prefill_per_step,
                 kv_layout=args.kv_layout, block_size=args.block_size,
                 n_blocks=args.n_blocks,
@@ -176,7 +183,14 @@ def main(argv=None):
                          "HBM as the slot layout would reserve)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable prefix-cache block sharing (paged)")
-    ap.add_argument("--max-prefill-per-step", type=int, default=2)
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="prefill tokens any engine step may spend; prompts "
+                         "longer than this advance chunk-by-chunk across "
+                         "steps beside the decode batch (default: 2x the "
+                         "KV capacity, i.e. effectively un-chunked)")
+    ap.add_argument("--max-prefill-per-step", type=int, default=None,
+                    help="DEPRECATED: request-count interleave bound; "
+                         "aliased to --token-budget N*capacity")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--trace", default=None,

@@ -375,17 +375,26 @@ def decode_step(params, caches, batch, cfg, unroll: bool = False):
 
 
 def forward_with_prefix(params, batch, cfg, prefix_k, prefix_v):
-    """Suffix prefill against cached context (paged prefix-cache hit).
+    """Mid-sequence prefill chunk against already-computed context.
 
-    ``batch["tokens"]`` [B, S] are the UNCACHED suffix tokens of each
-    prompt; ``prefix_k/v`` [L, B, P, KV, hd] is the shared-prefix KV
-    gathered from the paged arena.  RoPE positions and the causal mask
-    are offset by P, so suffix token i sits at absolute position P + i
-    and attends to the whole prefix plus its own causal context —
-    numerically the same as prefilling the full prompt, minus the
-    FLOPs/HBM for the P cached positions.
+    This is the serving engine's one chunked-forward primitive, covering
+    both cases that continue a sequence whose leading KV already exists:
+    a paged prefix-cache hit (the context was computed by an earlier
+    request) and a chunked-prefill step (the context is this request's own
+    earlier chunks — slot or paged layout, the caller gathers it either
+    way).
 
-    Returns (logits [B, S, V], (k, v) suffix caches [L, B, S, KV, hd]).
+    ``batch["tokens"]`` [B, S] are the next S tokens of each sequence;
+    ``prefix_k/v`` [L, B, P, KV, hd] is the KV of the P tokens before
+    them.  RoPE positions and the causal/sliding-window mask are offset by
+    P, so chunk token i sits at absolute position P + i and attends to the
+    whole prefix plus its own causal context — numerically the same as
+    prefilling the full sequence in one shot, minus the FLOPs/HBM for the
+    P already-written positions.  Where the KV lands (slot offset or block
+    table slots) is the pools' concern; this function only returns the
+    chunk's fresh KV.
+
+    Returns (logits [B, S, V], (k, v) chunk caches [L, B, S, KV, hd]).
     """
     from ..parallel import policy as pol
     tokens = batch["tokens"]
@@ -396,10 +405,12 @@ def forward_with_prefix(params, batch, cfg, prefix_k, prefix_v):
     if cfg.mrope_sections is not None:
         positions = jnp.broadcast_to(positions[None], (3, B, S))
     x = pol.shard(x, ("fsdp", None, None))
+    q_chunks = _auto_q_chunks(S)
 
     def body(h, xs):
         lp, pk, pv = xs
-        h, kv = block_forward(lp, h, positions, cfg, prior_kv=(pk, pv))
+        h, kv = block_forward(lp, h, positions, cfg, q_chunks=q_chunks,
+                              prior_kv=(pk, pv))
         return h, kv
     x, (k, v) = jax.lax.scan(body, x, (params["layers"], prefix_k, prefix_v))
 

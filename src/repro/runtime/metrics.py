@@ -1,14 +1,20 @@
 """Serving/runtime latency instrumentation.
 
 ``RequestMetrics`` records one request's lifecycle timestamps (all from the
-engine's injected clock, so tests can drive virtual time); ``summarize``
-folds a set of finished requests into the numbers the benchmark reports:
-throughput (generated tok/s over the measured window) and p50/p99 of
-time-to-first-token, per-output-token latency, and end-to-end latency.
+engine's injected clock, so tests can drive virtual time) plus the chunked-
+prefill trail: how many prefill chunks the request took to reach its first
+token, and every inter-token gap its consumer observed.  ``summarize`` folds
+a set of finished requests into the numbers the benchmark reports:
+throughput (generated tok/s over the measured window), p50/p99 of
+time-to-first-token, per-output-token latency, end-to-end latency, the
+pooled inter-token-latency percentiles (the decode-tail stall metric
+chunked prefill exists to shrink), and a prefill-chunk histogram.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 
 import numpy as np
 
@@ -20,6 +26,14 @@ class RequestMetrics:
     first_token: float = 0.0           # first generated token emitted
     finished: float = 0.0              # final token emitted / evicted
     n_tokens: int = 0                  # generated tokens (prompt excluded)
+    # chunked-prefill trail: prefill calls this request's prompt (plus any
+    # re-prefilled history after a preemption) was split into
+    prefill_chunks: int = 0
+    # every observed gap between consecutive generated tokens — includes
+    # engine stalls (a long prefill sharing the step, preemption waits),
+    # which is exactly what the decode-tail p99 must capture
+    itl: list = dataclasses.field(default_factory=list)
+    last_token_at: float = 0.0         # internal: previous emit timestamp
 
     @property
     def queue_wait(self) -> float:
@@ -49,10 +63,18 @@ def percentiles(values, ps=(50, 99)) -> dict[str, float]:
     return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
 
+def histogram(values) -> dict[str, int]:
+    """Exact counts keyed by value (chunk counts are small integers)."""
+    return {str(v): c
+            for v, c in collections.Counter(int(x) for x in values).items()}
+
+
 def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
     """Aggregate finished-request metrics over a ``wall_s``-second window."""
     done = [m for m in metrics if m.n_tokens > 0]
     total_tokens = sum(m.n_tokens for m in done)
+    gaps = [g for m in done for g in m.itl]
+    chunks = [m.prefill_chunks for m in done]
     out = {
         "n_requests": len(done),
         "total_tokens": total_tokens,
@@ -60,15 +82,28 @@ def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
         "tok_per_s": total_tokens / wall_s if wall_s > 0 else float("nan"),
         "ttft": percentiles([m.ttft for m in done]),
         "tpot": percentiles([m.tpot for m in done if m.n_tokens > 1]),
+        "itl": percentiles(gaps),
         "e2e": percentiles([m.e2e for m in done]),
         "queue_wait": percentiles([m.queue_wait for m in done]),
+        "prefill_chunks": {
+            "mean": float(np.mean(chunks)) if chunks else math.nan,
+            "max": int(max(chunks, default=0)),
+            "hist": histogram(chunks),
+        },
     }
     return out
 
 
 def format_summary(name: str, s: dict) -> str:
-    return (f"{name:>8}: {s['n_requests']} req, {s['total_tokens']} tok "
+    line = (f"{name:>8}: {s['n_requests']} req, {s['total_tokens']} tok "
             f"in {s['wall_s']:.2f}s = {s['tok_per_s']:.1f} tok/s | "
             f"ttft p50 {s['ttft']['p50']*1e3:.0f}ms p99 {s['ttft']['p99']*1e3:.0f}ms | "
             f"tpot p50 {s['tpot']['p50']*1e3:.1f}ms p99 {s['tpot']['p99']*1e3:.1f}ms | "
             f"e2e p50 {s['e2e']['p50']*1e3:.0f}ms p99 {s['e2e']['p99']*1e3:.0f}ms")
+    itl = s.get("itl", {})
+    if itl and not math.isnan(itl.get("p99", math.nan)):
+        line += f" | itl p99 {itl['p99']*1e3:.1f}ms"
+    ch = s.get("prefill_chunks", {})
+    if ch.get("max", 0) > 1:
+        line += f" | chunks max {ch['max']}"
+    return line

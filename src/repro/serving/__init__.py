@@ -9,6 +9,10 @@ prefill/decode scheduling, per-request sampling + streaming callbacks).
 ``kv_layout="slot"`` reserves a contiguous max_len KV region per request;
 ``kv_layout="paged"`` allocates block_size-token blocks on demand with
 prefix sharing and preempt-to-queue under memory pressure (serving/paged/).
+``token_budget=`` bounds the prefill tokens any step may spend: prompts
+larger than the budget advance chunk-by-chunk across steps beside the
+decode batch, so long prompts never stall everyone else's tokens
+(``max_prefill_per_step`` is the deprecated request-count spelling).
 ``mesh=`` makes the engine tensor-parallel through the serving placement
 layer (serving/placement.py) — token-identical to the single-device path.
 
@@ -22,6 +26,7 @@ from .engine import KV_LAYOUTS, ServingEngine, SUPPORTED_FAMILIES
 from .paged import OutOfBlocks, PagedKVPool
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
-from .scheduler import QueueFull, RequestQueue
-from .trace import (TraceRequest, load_trace, poisson_trace, replay,
-                    save_trace)
+from .scheduler import (CHUNK_QUANTUM, QueueFull, RequestQueue, plan_chunks,
+                        resolve_token_budget)
+from .trace import (TraceRequest, load_trace, long_prompt_trace,
+                    poisson_trace, replay, save_trace)

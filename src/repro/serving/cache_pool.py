@@ -3,15 +3,20 @@
 ``SlotKVPool`` is the original contiguous layout: one allocation at engine
 start of k/v buffers [L, n_slots, max_len, KV, hd] plus a per-slot
 filled-position vector [n_slots].  Requests are assigned a slot for their
-lifetime; prefill KV is written left-aligned into the slot, decode steps
-write at each slot's own position (models/transformer.py slot-indexed
-decode).  Buffer shapes never change, so the decode step compiles exactly
-once — at the cost of reserving ``max_len`` tokens of HBM per slot whether
-a request uses them or not.  ``serving/paged/`` removes that reservation.
+lifetime; prefill KV is scattered into the slot at the request's cursor
+(chunked prefill writes each chunk at its own offset), decode steps write at
+each slot's own position (models/transformer.py slot-indexed decode).
+Buffer shapes never change, so the decode step compiles exactly once — at
+the cost of reserving ``max_len`` tokens of HBM per slot whether a request
+uses them or not.  ``serving/paged/`` removes that reservation.
 
-Freed slots are immediately reusable: every KV position a new request's
-attention can see ([0, pos)) is freshly written by its own prefill/decode
-before it becomes visible, so no zeroing pass is needed on release.
+Freed slots are immediately reusable and rows mid-prefill may share a fused
+decode step with decoding rows: every KV position a request's attention can
+see ([0, pos)) is freshly written by its own prefill chunk or decode before
+it becomes visible, and any position >= pos is overwritten (by the next
+chunk's scatter, or by decode's write-before-attend) before any query reads
+it — so neither zeroing on release nor masking the batch-wide decode write
+is needed.
 
 Invariant violations raise ``CachePoolError`` subclasses — real
 exceptions, not ``assert``, so the checks survive ``python -O``.
@@ -23,6 +28,7 @@ from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class CachePoolError(RuntimeError):
@@ -45,8 +51,9 @@ class KVCachePool(Protocol):
     Attributes: ``k``/``v`` device buffers consumed by the jitted decode,
     ``pos`` per-lane filled positions, ``n_slots`` decode-batch width,
     ``n_free`` free concurrency units, ``max_request_tokens`` the longest
-    admissible request.  Layout-specific admission/write paths stay on the
-    concrete classes; the engine dispatches on ``kv_layout`` for those.
+    admissible request, ``gather_prefix`` the chunked-prefill context
+    fetch.  Layout-specific admission/write paths stay on the concrete
+    classes; the engine dispatches on ``kv_layout`` for those.
     """
     n_slots: int
 
@@ -62,9 +69,15 @@ class KVCachePool(Protocol):
 
 
 @partial(jax.jit, donate_argnums=(0,))
-def _install(pool, kv, slots):
-    """In-place (donated) write of an admission group into the pool."""
-    return pool.at[:, slots, :kv.shape[2]].set(kv)
+def _scatter_tokens(pool, vals, slots):
+    """Write ``vals [L, T, KV, hd]`` at flat token ``slots [T]`` of the pool
+    (viewed as [L, n_slots*max_len, KV, hd]), in place (donated).  Indices
+    past the flat extent are dropped — batch/bucket padding routes there, so
+    one compiled scatter per (T,) shape serves every (slot, offset) mix."""
+    L, ns, ml = pool.shape[:3]
+    flat = pool.reshape(L, ns * ml, *pool.shape[3:])
+    flat = flat.at[:, slots].set(vals.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
 
 
 class SlotKVPool:
@@ -104,26 +117,49 @@ class SlotKVPool:
 
     # ---------------------------------------------------------------- data
     def write_prefill_group(self, slots: list[int], k, v,
-                            lengths: list[int]) -> None:
-        """Install a prefilled admission group: k/v [L, B, S_bucket, KV, hd].
+                            lengths: list[int], offset: int = 0) -> None:
+        """Scatter a prefill-chunk group into its slots at ``offset``.
 
-        The whole padded bucket is written in ONE donated scatter per
-        buffer (no per-request pool copies).  Rows past each request's
-        prompt length hold pad-token KV but are never visible: attention
-        masks by the slot's pos, and decode overwrites position p before
-        any query attends to it."""
-        if max(lengths) > self.max_len:
-            raise CapacityError(f"prefill of {max(lengths)} tokens exceeds "
-                                f"slot capacity {self.max_len}")
-        w = min(k.shape[2], self.max_len)
-        slots_arr = jnp.asarray(slots)
-        self.k = _install(self.k, k[:, :, :w], slots_arr)
-        self.v = _install(self.v, v[:, :, :w], slots_arr)
-        self.pos = self.pos.at[slots_arr].set(jnp.asarray(lengths, jnp.int32))
+        ``k``/``v``: [L, B, S_bucket, KV, hd] with B >= len(slots) (batch
+        pad) and S_bucket >= each row's chunk length (bucket pad).  Real
+        (slot, position) pairs map into the flat pool; every pad element
+        maps past the pool's extent and is dropped by the scatter, so the
+        compiled shape depends only on (B, S_bucket) — not on the offset,
+        which is what keeps chunked prefill at one compile per bucket."""
+        L, B, S = k.shape[:3]
+        if offset + max(lengths) > self.max_len:
+            raise CapacityError(
+                f"prefill of {max(lengths)} tokens at offset {offset} "
+                f"exceeds slot capacity {self.max_len}")
+        oob = self.n_slots * self.max_len          # dropped by the scatter
+        idx = np.full((B, S), oob, np.int64)
+        for i, (slot, ln) in enumerate(zip(slots, lengths)):
+            idx[i, :ln] = slot * self.max_len + offset + np.arange(ln)
+        idx = jnp.asarray(idx.reshape(-1))
+        self.k = _scatter_tokens(self.k, k.reshape(L, B * S, *k.shape[3:]), idx)
+        self.v = _scatter_tokens(self.v, v.reshape(L, B * S, *v.shape[3:]), idx)
+        ends = jnp.asarray([offset + ln for ln in lengths], jnp.int32)
+        self.pos = self.pos.at[jnp.asarray(slots)].set(ends)
+
+    def gather_prefix(self, slots: list[int], n_prefix: int,
+                      n_rows_padded: int):
+        """Materialize [L, B, n_prefix, KV, hd] of already-written KV for a
+        chunk group (batch-pad rows replicate slot 0's data — computed on
+        but never read back)."""
+        idx = np.zeros((n_rows_padded,), np.int32)
+        idx[:len(slots)] = slots
+        idx = jnp.asarray(idx)
+        return self.k[:, idx, :n_prefix], self.v[:, idx, :n_prefix]
 
     def update(self, caches: dict, active_mask) -> None:
-        """Adopt a decode step's outputs; inactive slots' positions are
-        pinned to 0 so stale counters never walk past max_len."""
+        """Adopt a decode step's outputs.  Only rows in ``active_mask``
+        (this step's decode batch, minus retirements) advance their
+        position; everyone else — free slots and rows mid-prefill — keeps
+        its previous position, so a prefill cursor survives sharing the
+        fused step with decoders.  (The batch-wide decode write did land a
+        garbage token at each inactive row's position, but the next chunk
+        scatter / next occupant's prefill overwrites it before any query
+        can attend there — see the module docstring.)"""
         self.k = caches["k"]
         self.v = caches["v"]
-        self.pos = jnp.where(active_mask, caches["pos"], 0)
+        self.pos = jnp.where(active_mask, caches["pos"], self.pos)

@@ -1,60 +1,74 @@
 """Continuous-batching serving engine over the model zoo's compressed-weight
 path.
 
-The engine owns a preallocated KV pool and runs iteration-level
-scheduling: every ``step()`` evicts expired queue entries, admits new
-requests (bounded prefill work interleaved between decode steps), then
-advances ALL running requests by one token in a single fused decode step.
-New requests join the running batch without disturbing it — per-row
-attention/norms are independent and each lane carries its own cache
-position, so a request's tokens are identical whether it runs alone or
-packed next to strangers (tested).
+The engine owns a preallocated KV pool and runs a SINGLE token-budgeted
+iteration: every ``step()`` evicts expired queue entries, then assembles a
+mixed batch of work under one ``token_budget`` of prefill tokens — in-flight
+partial prefills advance first, then new admissions from the queue head —
+and finally advances every prefill-complete request by one token in a single
+fused decode step.  Long prompts no longer monopolize a step: a prompt
+larger than the budget is split into chunks that land across consecutive
+steps (per-request ``prefill_cursor``), each chunk attending to all KV the
+request has already written (``models/transformer.forward_with_prefix``:
+RoPE positions and the causal mask are offset by the cursor, so chunked
+prefill is numerically the prefill it replaces).  Decoding requests keep
+emitting a token every step while a long prompt trickles in beside them —
+that is the point: bounded decode-tail inter-token latency under mixed
+workloads, the regime where the paper's 8:16+outlier compressed weights are
+deployed.  New requests join the running batch without disturbing it —
+per-row attention/norms are independent and each lane carries its own cache
+position, so a request's tokens are identical whether it runs alone, packed
+next to strangers, or chunked under any budget (tested).
 
 Two KV layouts behind one API (``kv_layout=``):
 
   "slot"   SlotKVPool: contiguous [L, n_slots, max_len, KV, hd] buffers,
            one slot reserved per request for its lifetime.  Simplest and
            compile-once, but reserves max_len tokens of HBM per slot.
+           Prefill chunks scatter into the slot at the cursor offset.
   "paged"  PagedKVPool (serving/paged/): KV lives in block_size-token
            blocks allocated on demand from a shared arena, found through
            per-request block tables and attended via a gather-based
            paged decode step (models/transformer.decode_step_paged).
-           Identical prefixes share blocks read-only (prefix cache), so
-           a fleet of requests with one system prompt stores its KV
-           once and skips recomputing it (lower TTFT).  Admission is
-           block-aware and decode pressure preempts the youngest request
-           back to the queue instead of failing; a preempted request
-           resumes by re-prefilling prompt + generated-so-far, which
-           reproduces its token stream exactly.
+           Block allocation is chunk-aware — a half-prefilled prompt
+           holds only the blocks its cursor has filled.  Identical
+           prefixes share blocks read-only (prefix cache); decode or
+           prefill pressure preempts the youngest request back to the
+           queue, whose fully-written blocks are first published to the
+           prefix cache so the resume restarts its cursor at the last
+           fully-written block instead of recomputing everything.
 
 Works unchanged for dense weights or ``SparseWeight`` compressed params
 (models/sparse_serving.py): the weights are just a pytree passed through the
 jitted prefill/decode functions, so the 8:16 (+structured outlier) serving
-path gets continuous batching for free.
+path gets continuous batching and chunked prefill for free.
 
 Supported families: token-input transformers with [L, B, S, KV, hd] KV
 caches ("dense", "moe").  Recurrent/enc-dec families keep the one-shot path
 in launch/serve.py.
 
-Prefill batching: admitted prompts are padded to power-of-two length buckets
-and grouped, so the number of distinct compiled prefill shapes stays small
-under mixed prompt lengths.  With causal attention the bucket padding
-(after the prompt) cannot influence prompt logits or KV — including MoE,
-whose local routing is capacity-free (models/moe.py _moe_local).  The
-engine's traced functions run under ``policy.suspended()`` precisely to
-keep that path on every mesh: an active activation-sharding policy would
-flip MoE to the capacity-BOUNDED expert-parallel route, where pad tokens
-compete with real tokens for expert capacity.
+Chunk batching: chunks at the same cursor are padded to power-of-two length
+buckets and grouped, so the number of distinct compiled prefill shapes stays
+small under mixed prompt lengths — and because chunk lengths are quantized
+(scheduler.CHUNK_QUANTUM) the cursor ladder is small too.  With causal
+attention the bucket padding (after each chunk) cannot influence real logits
+or KV — including MoE, whose local routing is capacity-free (models/moe.py
+_moe_local).  The engine's traced functions run under ``policy.suspended()``
+precisely to keep that path on every mesh: an active activation-sharding
+policy would flip MoE to the capacity-BOUNDED expert-parallel route, where
+pad tokens compete with real tokens for expert capacity.
 
 Mesh-native serving (``mesh=``): pass a ``("data", "model")`` mesh and the
 engine becomes tensor-parallel end to end through one placement layer
 (serving/placement.py): params — dense and SparseWeight compressed buffers
 alike — are committed out-dim-sharded over "model", both KV layouts shard
-their arenas' KV-head dim, and every jitted prefill/decode function carries
-explicit in/out shardings.  Block tables, the prefix cache, and all
-scheduling state stay host-side and layout-agnostic.  Token streams are
-identical to the single-device engine (tests/test_mesh_serving.py); with no
-mesh (default) nothing changes from the single-device behavior.
+their arenas' KV-head dim, and every jitted step function carries the
+explicit in/out shardings of ``placement.step_fn_shardings`` (the chunked
+fn's prefix KV uses the arena spec, so gathers stay shard-local).  Block
+tables, the prefix cache, and all scheduling state stay host-side and
+layout-agnostic.  Token streams are identical to the single-device engine
+(tests/test_mesh_serving.py, tests/test_chunked_prefill.py); with no mesh
+(default) nothing changes from the single-device behavior.
 """
 from __future__ import annotations
 
@@ -71,8 +85,9 @@ from .paged import OutOfBlocks, PagedKVPool
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .sampling import sample_tokens
-from .scheduler import (QueueFull, RequestQueue, admission_budget,
-                        pick_preemption_victim)
+from .scheduler import (CHUNK_QUANTUM, QueueFull, RequestQueue,
+                        pick_preemption_victim, plan_chunks,
+                        resolve_token_budget)
 
 SUPPORTED_FAMILIES = ("dense", "moe")
 KV_LAYOUTS = ("slot", "paged")
@@ -88,7 +103,9 @@ def _bucket(n: int, lo: int = 8) -> int:
 class ServingEngine:
     def __init__(self, cfg, params, *, n_slots: int = 8, max_len: int = 256,
                  max_queue: int = 64, queue_timeout_s: float | None = None,
-                 max_prefill_per_step: int = 2, kv_layout: str = "slot",
+                 token_budget: int | None = None,
+                 max_prefill_per_step: int | None = None,
+                 kv_layout: str = "slot",
                  block_size: int = 16, n_blocks: int | None = None,
                  prefix_caching: bool = True, lookahead_blocks: int = 1,
                  paged_attn_backend: str | None = None, mesh=None,
@@ -116,7 +133,11 @@ class ServingEngine:
             self.pool = SlotKVPool(cfg, n_slots, max_len,
                                    placement=self.placement)
         self.queue = RequestQueue(max_queue, queue_timeout_s)
-        self.max_prefill_per_step = max_prefill_per_step
+        # per-step prefill token budget (max_prefill_per_step is the
+        # deprecated request-count knob, aliased with a one-time warning)
+        self.token_budget = resolve_token_budget(token_budget,
+                                                 max_prefill_per_step,
+                                                 max_len)
         self.lookahead_blocks = lookahead_blocks
         self.running: dict[int, Request] = {}        # slot/row -> request
         self.finished: list[Request] = []
@@ -132,8 +153,9 @@ class ServingEngine:
         self._seeds = np.zeros((n_slots,), np.int32)
         self._gen_count = np.zeros((n_slots,), np.int32)
         self._last_token = np.zeros((n_slots,), np.int32)
-        # logits of each slot's most recent position (prefill scatters here
-        # so first-token sampling reuses the one slot-wide sampler)
+        # logits of each slot's most recent position (a final prefill chunk
+        # scatters here so first-token sampling reuses the one slot-wide
+        # sampler)
         self._slot_logits = self.placement.place_replicated(
             jnp.zeros((n_slots, cfg.vocab), jnp.float32))
 
@@ -146,26 +168,23 @@ class ServingEngine:
                     return fn(*args)
             return traced
 
-        pl = self.placement
+        sh = self.placement.step_fn_shardings(psh)
 
-        def jit(fn, in_sh=None, out_sh=None, donate=()):
-            """jit with the placement's explicit in/out shardings; a plain
-            single-device jit when no mesh is set (today's behavior)."""
-            if not pl.active:
-                return jax.jit(suspend(fn), donate_argnums=donate)
-            return jax.jit(suspend(fn), in_shardings=in_sh,
-                           out_shardings=out_sh, donate_argnums=donate)
+        def jit(fn, role, donate=()):
+            """jit with the placement's explicit in/out shardings for this
+            role; a plain single-device jit when no mesh is set."""
+            return jax.jit(suspend(fn), donate_argnums=donate, **sh[role])
 
-        rep, kvsh = pl.replicated, pl.kv
         self._prefill_fn = jit(
             lambda p, t: tfm.forward(p, {"tokens": t}, cfg, collect_kv=True),
-            in_sh=(psh, rep), out_sh=(rep, (kvsh, kvsh)))
-        # suffix prefill against gathered prefix KV (paged prefix-cache
-        # hits); retraces once per (prefix_len, bucket) shape pair
-        self._prefix_prefill_fn = jit(
+            "prefill")
+        # mid-sequence chunk against gathered context KV: paged prefix-cache
+        # hits AND every chunked-prefill continuation on either layout;
+        # retraces once per (prefix_len, bucket) shape pair
+        self._chunk_fn = jit(
             lambda p, t, pk, pv: tfm.forward_with_prefix(
                 p, {"tokens": t}, cfg, pk, pv),
-            in_sh=(psh, rep, kvsh, kvsh), out_sh=(rep, (kvsh, kvsh)))
+            "chunk")
         # k/v are donated: the pool adopts the step's output buffers, so the
         # multi-GB caches update in place instead of being copied every token
         # (cache out shardings == in shardings, so donation stays in place
@@ -173,17 +192,12 @@ class ServingEngine:
         self._decode_fn = jit(
             lambda p, k, v, pos, t: tfm.decode_step(
                 p, {"k": k, "v": v, "pos": pos}, {"tokens": t}, cfg),
-            in_sh=(psh, kvsh, kvsh, rep, rep),
-            out_sh=(rep, {"k": kvsh, "v": kvsh, "pos": rep}),
-            donate=(1, 2))
+            "decode", donate=(1, 2))
         self._decode_paged_fn = jit(
             lambda p, k, v, bt, pos, t: tfm.decode_step_paged(
                 p, {"k": k, "v": v, "block_tables": bt, "pos": pos},
                 {"tokens": t}, cfg, attn_backend=paged_attn_backend),
-            in_sh=(psh, kvsh, kvsh, rep, rep, rep),
-            out_sh=(rep, {"k": kvsh, "v": kvsh, "block_tables": rep,
-                          "pos": rep}),
-            donate=(1, 2))
+            "decode_paged", donate=(1, 2))
 
     # ------------------------------------------------------------ admission
     def submit(self, prompt, sampling: SamplingParams | None = None,
@@ -217,25 +231,22 @@ class ServingEngine:
         return bool(self.running) or len(self.queue) > 0
 
     def step(self) -> dict:
-        """One scheduling iteration: evict -> admit/prefill -> decode."""
+        """One token-budgeted iteration: evict -> prefill chunks under the
+        budget (in-flight cursors first, then admissions) -> fused decode
+        of every prefill-complete request."""
         now = self._clock()
         stats = {"evicted": 0, "admitted": 0, "finished": 0, "decoded": 0,
-                 "preempted": 0}
+                 "preempted": 0, "prefill_tokens": 0, "prefill_chunks": 0}
 
         for req in self.queue.evict_expired(now):
             req._finish(Status.EVICTED, now)
             self.finished.append(req)
             stats["evicted"] += 1
 
-        budget = admission_budget(len(self.queue), self.pool.n_free,
-                                  len(self.running), self.max_prefill_per_step)
-        if budget:
-            admits = [self.queue.pop() for _ in range(budget)]
-            stats["finished"] += self._admit(admits, stats)
+        self._prefill_phase(stats, now)
 
         self.max_running = max(self.max_running, len(self.running))
-        if self.running:
-            stats["decoded"] = len(self.running)
+        if any(r.status is Status.RUNNING for r in self.running.values()):
             stats["finished"] += self._decode_once(stats)
 
         self.n_steps += 1
@@ -254,6 +265,7 @@ class ServingEngine:
         out = {"n_steps": self.n_steps, "max_running": self.max_running,
                "n_preemptions": self.n_preemptions,
                "kv_layout": self.kv_layout,
+               "token_budget": self.token_budget,
                "placement": self.placement.describe()}
         if self.kv_layout == "paged":
             out["pool"] = self.pool.stats()
@@ -272,61 +284,116 @@ class ServingEngine:
     # ------------------------------------------------------------ internals
     @staticmethod
     def _seq(req: Request) -> list[int]:
-        """The token sequence a (re-)prefill must cover: the prompt plus
-        anything already generated before a preemption."""
+        """The token sequence prefill must cover: the prompt plus anything
+        already generated before a preemption."""
         return list(req.prompt) + req.tokens
 
-    def _admit(self, reqs: list[Request], stats: dict) -> int:
-        """Prefill ``reqs`` (grouped so each shape compiles exactly once),
-        install their KV, and emit each request's next token.  Returns the
-        number of requests that finished immediately."""
-        if self.kv_layout == "paged":
-            placed, deferred = [], []
-            for i, r in enumerate(reqs):
-                if deferred:
-                    deferred.append(r)
-                    continue
-                seq = self._seq(r)
-                if not self.pool.can_admit(len(seq), self.lookahead_blocks):
-                    deferred.append(r)
-                    continue
-                try:
-                    row, n_cached = self.pool.admit(seq)
-                except OutOfBlocks:
-                    deferred.append(r)
-                    continue
-                placed.append((r, row, n_cached))
-            for r in reversed(deferred):      # keep FIFO order at the head
-                self.queue.push_front(r)
-            stats["admitted"] += len(placed)
-            by_shape: dict[tuple[int, int], list] = {}
-            for r, row, n_cached in placed:
-                suffix = len(self._seq(r)) - n_cached
-                by_shape.setdefault((n_cached, _bucket(suffix)),
-                                    []).append((r, row))
-            n_finished = 0
-            chunk = max(self.max_prefill_per_step, 1)
-            for (n_cached, bucket), group in sorted(by_shape.items()):
-                for start in range(0, len(group), chunk):
-                    n_finished += self._prefill_group_paged(
-                        group[start:start + chunk], n_cached, bucket, chunk)
-            return n_finished
+    def _written_seq(self, req: Request) -> list[int]:
+        """The leading tokens whose KV the request has actually written —
+        what a preemption can publish to the prefix cache for cursor
+        resume.  Mid-prefill that is the cursor; for a decoding request
+        everything but the last generated token (whose KV is only written
+        when it is fed into the next decode step)."""
+        seq = self._seq(req)
+        if req.status is Status.PREFILLING:
+            return seq[:req.prefill_cursor]
+        return seq[:-1] if req.tokens else seq
 
-        stats["admitted"] += len(reqs)
-        by_bucket: dict[int, list[Request]] = {}
-        for r in reqs:
-            by_bucket.setdefault(_bucket(len(self._seq(r))), []).append(r)
-        n_finished = 0
-        chunk = max(self.max_prefill_per_step, 1)
-        for bucket, bucket_group in sorted(by_bucket.items()):
-            for start in range(0, len(bucket_group), chunk):
-                group = bucket_group[start:start + chunk]
-                n_finished += self._prefill_group(group, bucket, chunk)
-        return n_finished
+    # -------------------------------------------------------- prefill phase
+    def _prefill_phase(self, stats: dict, now: float) -> None:
+        """Spend up to ``token_budget`` prompt tokens: advance in-flight
+        prefill cursors first (admission order), then admit new requests
+        from the queue head, FIFO, with layout-aware placement."""
+        in_flight = sorted(
+            (r for r in self.running.values()
+             if r.status is Status.PREFILLING),
+            key=lambda r: (r.metrics.admitted, r.request_id))
+        spec = [(r, len(self._seq(r)) - r.prefill_cursor) for r in in_flight]
+        queued = [(r, len(self._seq(r))) for r in self.queue]
+
+        def try_admit(req, chunk):
+            seq = self._seq(req)
+            if self.kv_layout == "paged":
+                if not self.pool.can_admit(chunk, self.lookahead_blocks):
+                    return None
+                try:
+                    row, n_cached = self.pool.admit(seq, alloc_tokens=0)
+                except OutOfBlocks:
+                    return None
+                end = n_cached + min(chunk, len(seq) - n_cached)
+                try:
+                    self.pool.ensure_capacity(row, end)
+                except OutOfBlocks:
+                    self.pool.release(row)
+                    return None
+            else:
+                row = self.pool.alloc()
+                if row is None:
+                    return None
+                n_cached = 0
+            popped = self.queue.pop()          # the planned head, by FIFO
+            if popped is not req:
+                raise CachePoolError("queue head changed during planning")
+            self._install_running(req, row, now)
+            req.prefill_cursor = n_cached
+            stats["admitted"] += 1
+            return len(seq) - n_cached
+
+        chunk_plan = plan_chunks(spec, queued, self.token_budget,
+                                 CHUNK_QUANTUM, try_admit)
+
+        runnable = []
+        for req, take in chunk_plan:
+            if self.running.get(req.slot) is not req:
+                continue                       # preempted by a prior chunk
+            if (self.kv_layout == "paged"
+                    and not self._ensure_chunk_capacity(req, take, stats)):
+                continue
+            runnable.append((req, take))
+
+        by_shape: dict[tuple[int, int], list] = {}
+        for req, take in runnable:
+            by_shape.setdefault((req.prefill_cursor, _bucket(take)),
+                                []).append((req, take))
+        for (cursor, bucket), group in sorted(by_shape.items()):
+            # a LATER plan entry's capacity loop may have preempted a
+            # request after it was validated into runnable (its slot is
+            # None and its cursor reset) — re-check liveness per group
+            group = [(r, t) for r, t in group
+                     if self.running.get(r.slot) is r
+                     and r.prefill_cursor == cursor]
+            if group:
+                stats["finished"] += self._run_chunk_group(group, cursor,
+                                                           bucket, stats)
+
+    def _ensure_chunk_capacity(self, req: Request, take: int,
+                               stats: dict) -> bool:
+        """Grow the row's block table to hold the next chunk.  Under
+        pressure: if anything is decoding, skip the chunk this step (the
+        decoders drain and free blocks); otherwise preempt the youngest
+        OTHER request and retry — the oldest prefill always makes
+        progress, so the engine cannot livelock on its own prefills."""
+        while True:
+            try:
+                self.pool.ensure_capacity(req.slot,
+                                          req.prefill_cursor + take)
+                return True
+            except OutOfBlocks:
+                if any(r.status is Status.RUNNING
+                       for r in self.running.values()):
+                    return False
+                others = {s: r for s, r in self.running.items() if r is not req}
+                if not others:
+                    # cannot happen for admissible requests (submit bounds
+                    # prompt+gen by pool capacity), so this is an
+                    # accounting bug, not workload pressure
+                    raise CachePoolError(
+                        "sole prefilling request cannot grow its KV")
+                self._preempt_one(stats, exclude=req)
 
     def _install_running(self, req: Request, slot: int, now: float) -> None:
         req.slot = slot
-        req.status = Status.RUNNING
+        req.status = Status.PREFILLING
         req.metrics.admitted = now
         self.running[slot] = req
         self._temps[slot] = req.sampling.temperature
@@ -336,77 +403,73 @@ class ServingEngine:
         # len(tokens); fresh requests start at 0
         self._gen_count[slot] = len(req.tokens)
 
-    def _prefill_group(self, group: list[Request], bucket: int,
-                       batch_pad: int) -> int:
-        """Slot-layout prefill: full prompts, contiguous slot install."""
-        B = max(len(group), batch_pad)
-        seqs = [self._seq(r) for r in group]
+    def _run_chunk_group(self, group: list[tuple], cursor: int, bucket: int,
+                         stats: dict) -> int:
+        """Run one batched prefill chunk for rows sharing (cursor, bucket):
+        compute tokens [cursor, cursor+take) against the already-written
+        context, scatter the fresh KV at the cursor, and emit a first
+        token for every row whose cursor reached its sequence end.
+        Returns the number of requests that finished immediately."""
+        n = len(group)
+        B = _bucket(n, 1)                   # batch pad, power-of-two ladder
+        rows = [req.slot for req, _ in group]
+        seqs = [self._seq(req) for req, _ in group]
+        takes = [take for _, take in group]
         tokens = np.zeros((B, bucket), np.int32)
-        for i, s in enumerate(seqs):
-            tokens[i, :len(s)] = s
-        logits, (k, v) = self._prefill_fn(self.params, jnp.asarray(tokens))
-
-        now = self._clock()
-        slots = []
-        for r in group:
-            slot = self.pool.alloc()
-            if slot is None:
-                raise CachePoolError("scheduler admitted past free slots")
-            self._install_running(r, slot, now)
-            slots.append(slot)
-        n = len(group)                      # real rows; the rest is batch pad
-        self.pool.write_prefill_group(slots, k[:, :n], v[:, :n],
-                                      [len(s) for s in seqs])
-
-        lens = np.array([len(s) for s in seqs]) - 1
-        last_logits = logits[jnp.arange(n), jnp.asarray(lens)]
-        self._slot_logits = self._slot_logits.at[jnp.asarray(slots)].set(
-            last_logits.astype(jnp.float32))
-        return self._emit_tokens(slots)
-
-    def _prefill_group_paged(self, group: list[tuple], n_cached: int,
-                             bucket: int, batch_pad: int) -> int:
-        """Paged prefill of rows sharing (prefix length, suffix bucket):
-        compute only the uncached suffix, scatter its KV into the rows'
-        blocks, and publish full prompt blocks to the prefix cache."""
-        B = max(len(group), batch_pad)
-        rows = [row for _, row in group]
-        seqs = [self._seq(r) for r, _ in group]
-        suffixes = [s[n_cached:] for s in seqs]
-        tokens = np.zeros((B, bucket), np.int32)
-        for i, s in enumerate(suffixes):
-            tokens[i, :len(s)] = s
-        if n_cached > 0:
-            pk, pv = self.pool.gather_prefix(rows, n_cached, B)
-            logits, (k, v) = self._prefix_prefill_fn(
-                self.params, jnp.asarray(tokens), pk, pv)
+        for i, (seq, take) in enumerate(zip(seqs, takes)):
+            tokens[i, :take] = seq[cursor:cursor + take]
+        if cursor > 0:
+            pk, pv = self.pool.gather_prefix(rows, cursor, B)
+            logits, (k, v) = self._chunk_fn(self.params, jnp.asarray(tokens),
+                                            pk, pv)
         else:
             logits, (k, v) = self._prefill_fn(self.params,
                                               jnp.asarray(tokens))
+        if self.kv_layout == "paged":
+            self.pool.write_prefill(rows, k[:, :n], v[:, :n], cursor, takes)
+        else:
+            self.pool.write_prefill_group(rows, k[:, :n], v[:, :n], takes,
+                                          offset=cursor)
+        stats["prefill_tokens"] += sum(takes)
+        stats["prefill_chunks"] += n
 
-        now = self._clock()
-        for r, row in group:
-            self._install_running(r, row, now)
-        n = len(group)
-        self.pool.write_prefill(rows, k[:, :n], v[:, :n], n_cached,
-                                [len(s) for s in suffixes])
-        for (r, row), seq in zip(group, seqs):
-            self.pool.register_prefix(row, seq)
-
-        lens = np.array([len(s) for s in suffixes]) - 1
-        last_logits = logits[jnp.arange(n), jnp.asarray(lens)]
-        self._slot_logits = self._slot_logits.at[jnp.asarray(rows)].set(
+        done_idx, done_rows, done_last = [], [], []
+        for i, ((req, take), seq) in enumerate(zip(group, seqs)):
+            req.prefill_cursor = cursor + take
+            req.metrics.prefill_chunks += 1
+            if req.prefill_cursor == len(seq):
+                req.status = Status.RUNNING
+                if self.kv_layout == "paged":
+                    self.pool.register_prefix(req.slot, seq)
+                done_idx.append(i)
+                done_rows.append(req.slot)
+                done_last.append(take - 1)
+        if not done_rows:
+            return 0
+        last_logits = logits[jnp.asarray(done_idx), jnp.asarray(done_last)]
+        self._slot_logits = self._slot_logits.at[jnp.asarray(done_rows)].set(
             last_logits.astype(jnp.float32))
-        return self._emit_tokens(rows)
+        return self._emit_tokens(done_rows)
 
-    def _preempt_one(self, stats: dict) -> None:
-        """Push the youngest running request back to the queue head and
-        release its blocks; it will resume by re-prefilling."""
-        victim_slot = pick_preemption_victim(self.running)
+    # -------------------------------------------------------------- decode
+    def _preempt_one(self, stats: dict, exclude: Request | None = None) -> None:
+        """Push the youngest running request (never ``exclude``) back to
+        the queue head and release its blocks — after publishing its
+        fully-written blocks to the prefix cache, so the resume restarts
+        its cursor at the last fully-written block instead of
+        re-prefilling prompt + generated from scratch (when the cache has
+        been evicted in the meantime, the chunked prefill recomputes —
+        token streams are identical either way)."""
+        candidates = ({s: r for s, r in self.running.items() if r is not exclude}
+                      if exclude is not None else self.running)
+        victim_slot = pick_preemption_victim(candidates)
         req = self.running.pop(victim_slot)
+        if self.kv_layout == "paged":
+            self.pool.register_prefix(victim_slot, self._written_seq(req))
         self.pool.release(victim_slot)
         req.slot = None
         req.status = Status.QUEUED
+        req.prefill_cursor = 0
         req.n_preempted += 1
         self.queue.push_front(req)
         self.n_preemptions += 1
@@ -414,13 +477,22 @@ class ServingEngine:
             self.pool.n_preemptions += 1
         stats["preempted"] += 1
 
+    def _decode_rows(self) -> list[int]:
+        return sorted(s for s, r in self.running.items()
+                      if r.status is Status.RUNNING)
+
     def _decode_once(self, stats: dict | None = None) -> int:
-        """Advance every running slot one token in a single fused step."""
+        """Advance every prefill-complete request one token in a single
+        fused step.  Rows mid-prefill share the batch but are masked out
+        of position updates and sampling (their lanes compute a discarded
+        garbage token — see cache_pool/pool update docstrings for why the
+        stray write is harmless)."""
         stats = stats if stats is not None else {"preempted": 0}
+        active = self._decode_rows()
         if self.kv_layout == "paged":
             while True:
                 try:
-                    self.pool.prepare_decode(sorted(self.running))
+                    self.pool.prepare_decode(active)
                     break
                 except OutOfBlocks:
                     if len(self.running) <= 1:
@@ -430,24 +502,25 @@ class ServingEngine:
                         raise CachePoolError(
                             "sole running request cannot grow its KV")
                     self._preempt_one(stats)
-            if not self.running:
+                    active = self._decode_rows()
+            if not active:
                 return 0
-            active = sorted(self.running)
+            stats["decoded"] = len(active)
             tokens = jnp.asarray(self._last_token[:, None])
             logits, caches = self._decode_paged_fn(
                 self.params, self.pool.k, self.pool.v,
                 self.pool.block_tables, self.pool.pos, tokens)
         else:
-            active = sorted(self.running)
+            stats["decoded"] = len(active)
             tokens = jnp.asarray(self._last_token[:, None])
             logits, caches = self._decode_fn(self.params, self.pool.k,
                                              self.pool.v, self.pool.pos,
                                              tokens)
         self._slot_logits = logits.astype(jnp.float32)
         n_finished = self._emit_tokens(active)
-        still = np.zeros((self.pool.n_slots,), bool)
-        still[sorted(self.running)] = True
-        self.pool.update(caches, jnp.asarray(still))
+        advanced = np.zeros((self.pool.n_slots,), bool)
+        advanced[[s for s in active if s in self.running]] = True
+        self.pool.update(caches, jnp.asarray(advanced))
         return n_finished
 
     def _emit_tokens(self, slots: list[int]) -> int:

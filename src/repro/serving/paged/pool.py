@@ -12,10 +12,15 @@ and shared across requests with identical prefixes (``prefix_cache.py``).
 
 Admission therefore decouples concurrency from reservation: a row costs
 nothing until tokens are actually written, so ``n_rows`` can far exceed
-what per-row ``max_len`` reservation would allow in the same HBM.  The
-flip side is that the arena can run dry mid-decode; ``prepare_decode``
-raises ``OutOfBlocks`` and the engine preempts a running request back to
-the queue instead of failing.
+what per-row ``max_len`` reservation would allow in the same HBM.
+Allocation is chunk-aware: ``admit(alloc_tokens=...)`` maps only the
+first prefill chunk (plus any matched cached prefix) onto blocks, and
+``ensure_capacity`` appends blocks as the engine's prefill cursor
+advances — so a half-prefilled long prompt holds only the blocks it has
+actually filled.  The flip side is that the arena can run dry mid-decode
+or mid-prefill; ``prepare_decode``/``ensure_capacity`` raise
+``OutOfBlocks`` and the engine preempts a running request back to the
+queue instead of failing.
 
 One block is reserved as the *trash block*: inactive decode-batch rows
 (and prefill padding) point their tables/slots at it so the fused decode
@@ -30,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..cache_pool import CapacityError, DoubleFree
+from ..cache_pool import CachePoolError, CapacityError, DoubleFree
 from .block_pool import BlockPool, OutOfBlocks
 from .block_table import BlockTable, blocks_needed
 from .prefix_cache import PrefixCache
@@ -146,8 +151,8 @@ class PagedKVPool:
                     raise
 
     # --------------------------------------------------------- admission
-    def admit(self, tokens) -> tuple[int, int]:
-        """Assign a row and map the prompt onto blocks.
+    def admit(self, tokens, alloc_tokens: int | None = None) -> tuple[int, int]:
+        """Assign a row and map the (leading part of the) prompt onto blocks.
 
         Matches the longest cached prefix (sharing those blocks
         read-only), allocates fresh blocks for the rest, and returns
@@ -158,6 +163,12 @@ class PagedKVPool:
         block is first copied copy-on-write so the shared original stays
         immutable.  Raises ``OutOfBlocks`` (engine requeues the request)
         without leaking references.
+
+        ``alloc_tokens`` bounds how many leading tokens get fresh blocks
+        NOW (chunk-aware admission: the engine allocates per chunk via
+        ``ensure_capacity`` as the prefill cursor advances).  ``None``
+        allocates for the whole sequence up front; matched prefix blocks
+        are always kept regardless of the bound.
         """
         if not self._free_rows:
             raise CapacityError("admit called with no free rows")
@@ -175,6 +186,8 @@ class PagedKVPool:
         # (prefix_len, bucket) shapes instead of one per prompt length
         n_cached = min(len(matched) * bs, (n - 1) // bs * bs) if matched \
             else 0
+        target = n if alloc_tokens is None else min(n, max(alloc_tokens,
+                                                           n_cached))
         table_blocks = list(matched)
         try:
             if matched and n_cached < len(matched) * bs:
@@ -183,7 +196,7 @@ class PagedKVPool:
                 # original may be serving other requests read-only)
                 if self.blocks.ref[table_blocks[-1]] > 1:
                     table_blocks[-1] = self._cow(table_blocks[-1])
-            for _ in range(blocks_needed(n, bs) - len(table_blocks)):
+            for _ in range(blocks_needed(target, bs) - len(table_blocks)):
                 table_blocks.append(self._alloc_block())
         except OutOfBlocks:
             for b in table_blocks:
@@ -197,28 +210,49 @@ class PagedKVPool:
         self._pos_np[row] = 0            # set for real by write_prefill
         return row, n_cached
 
+    def ensure_capacity(self, row: int, n_tokens: int) -> None:
+        """Grow the row's table until it can hold ``n_tokens`` positions
+        (chunk-aware allocation: called before each prefill chunk lands).
+        No-op when the table already covers them.  Raises ``OutOfBlocks``
+        mid-growth; already-appended blocks stay on the table (they are
+        accounted to the row and used by the retried chunk)."""
+        if n_tokens > self.max_request_tokens:
+            raise CapacityError(
+                f"{n_tokens} tokens exceed pool capacity "
+                f"{self.max_request_tokens}")
+        t = self.tables[row]
+        if t is None:
+            raise CachePoolError(f"ensure_capacity on free row {row}")
+        while t.capacity < n_tokens:
+            t.append_block(self._alloc_block())
+            self._bt_np[row, t.n_blocks - 1] = t.blocks[-1]
+            self._bt_dirty = True
+
     # -------------------------------------------------------------- data
-    def write_prefill(self, rows: list[int], k, v, n_cached: int,
+    def write_prefill(self, rows: list[int], k, v, offset: int,
                       lengths: list[int]) -> None:
-        """Scatter a prefill group's suffix KV into the rows' blocks.
+        """Scatter a prefill-chunk group's KV into the rows' blocks at
+        sequence ``offset`` (the group's shared cursor: cached-prefix
+        length on a cache hit, the running chunk cursor otherwise —
+        partial-block boundaries are fine, the mapping is per token).
 
         ``k``/``v``: [L, B, S_bucket, KV, hd] with B >= len(rows) (batch
-        pad) and S_bucket >= each row's suffix length (bucket pad).  Real
+        pad) and S_bucket >= each row's chunk length (bucket pad).  Real
         (row, position) pairs map to their table slots; every pad element
         maps to the trash block, so the scatter shape is fixed per
         (bucket, batch) and compiles once."""
         L, B, S = k.shape[:3]
         bs = self.block_size
         if max(lengths) > S:
-            raise CapacityError(f"suffix of {max(lengths)} tokens exceeds "
+            raise CapacityError(f"chunk of {max(lengths)} tokens exceeds "
                                 f"prefill bucket {S}")
         trash_slot = self._trash * bs
         slots = np.full((B, S), trash_slot, np.int64)
         for i, (row, ln) in enumerate(zip(rows, lengths)):
             t = self.tables[row]
             for s in range(ln):
-                slots[i, s] = t.slot(n_cached + s)
-            self._pos_np[row] = n_cached + ln
+                slots[i, s] = t.slot(offset + s)
+            self._pos_np[row] = offset + ln
         slots = jnp.asarray(slots.reshape(-1))
         self.blocks.k = _scatter_tokens(
             self.blocks.k, k.reshape(L, B * S, *k.shape[3:]), slots)
@@ -226,14 +260,21 @@ class PagedKVPool:
             self.blocks.v, v.reshape(L, B * S, *v.shape[3:]), slots)
 
     def register_prefix(self, row: int, tokens) -> None:
-        """Publish the row's full prompt blocks into the prefix cache."""
+        """Publish the row's full blocks covering ``tokens`` into the
+        prefix cache.  ``tokens`` may be any fully-WRITTEN prefix of the
+        row's sequence — the whole prompt after its final chunk, or the
+        written history at preemption time (cursor resume: a re-admission
+        then matches these blocks instead of recomputing them)."""
         if self.prefix_cache is not None:
             self.prefix_cache.insert(tokens, self.tables[row].blocks)
 
     def gather_prefix(self, rows: list[int], n_cached: int,
                       n_rows_padded: int):
-        """Materialize [L, B, n_cached, KV, hd] prefix KV for a suffix-
-        prefill group (batch-pad rows replicate the trash block)."""
+        """Materialize [L, B, n_cached, KV, hd] of already-written KV for
+        a chunk group: the cached-prefix context on a cache hit, or all
+        previous chunks' KV when a prefill resumes mid-prompt (a partial
+        final block gathers whole and is sliced to the cursor).  Batch-pad
+        rows replicate the trash block."""
         bs = self.block_size
         nb = blocks_needed(n_cached, bs)
         ids = np.full((n_rows_padded, nb), self._trash, np.int32)
@@ -270,11 +311,18 @@ class PagedKVPool:
 
     def update(self, caches: dict, active_mask) -> None:
         """Adopt a decode step's donated arenas; positions advance on the
-        host mirror (inactive rows pinned to 0, i.e. the trash slot)."""
+        host mirror for this step's decode rows only.  Rows mid-prefill
+        keep their cursor, free rows keep a stale (harmless) value — the
+        batch-wide decode write for every non-decoding row lands either
+        in the trash block (free rows: their table IS the trash block;
+        mid-prefill rows at an unallocated block boundary) or at a
+        position the next chunk scatter overwrites before any query can
+        attend to it."""
         self.blocks.k = caches["k"]
         self.blocks.v = caches["v"]
         active = np.asarray(active_mask)
-        self._pos_np = np.where(active, self._pos_np + 1, 0).astype(np.int32)
+        self._pos_np = np.where(active, self._pos_np + 1,
+                                self._pos_np).astype(np.int32)
 
     # --------------------------------------------------------- lifecycle
     def release(self, row: int) -> None:

@@ -149,6 +149,43 @@ class ServingPlacement:
         return jax.tree_util.tree_map_with_path(
             one, params, is_leaf=lambda x: isinstance(x, SparseWeight))
 
+    def step_fn_shardings(self, param_shardings) -> dict:
+        """Explicit in/out shardings for every jitted step function of the
+        token-budgeted engine pipeline, keyed by function role:
+
+          "prefill"       (params, tokens) -> (logits, (k, v))
+          "chunk"         (params, tokens, prefix_k, prefix_v)
+                          -> (logits, (k, v)) — the chunked-prefill fn;
+                          prefix KV in AND fresh KV out carry the arena
+                          spec, so prefix gathers and chunk writes stay
+                          shard-local on the KV-head dim and the 1x8 mesh
+                          path remains token-identical to single-device
+          "decode"        slot-layout fused decode (donated arenas stay
+                          in place shard-for-shard)
+          "decode_paged"  paged fused decode (block tables replicated —
+                          host-side scheduling state)
+
+        With no mesh every entry is empty: the engine then builds plain
+        single-device jits.
+        """
+        if not self.active:
+            return {k: {} for k in ("prefill", "chunk", "decode",
+                                    "decode_paged")}
+        psh, rep, kv = param_shardings, self.replicated, self.kv
+        return {
+            "prefill": dict(in_shardings=(psh, rep),
+                            out_shardings=(rep, (kv, kv))),
+            "chunk": dict(in_shardings=(psh, rep, kv, kv),
+                          out_shardings=(rep, (kv, kv))),
+            "decode": dict(in_shardings=(psh, kv, kv, rep, rep),
+                           out_shardings=(rep, {"k": kv, "v": kv,
+                                                "pos": rep})),
+            "decode_paged": dict(in_shardings=(psh, kv, kv, rep, rep, rep),
+                                 out_shardings=(rep, {"k": kv, "v": kv,
+                                                      "block_tables": rep,
+                                                      "pos": rep})),
+        }
+
     # ------------------------------------------------------------ placement
     def place_params(self, params):
         """Commit the (possibly compressed) param pytree to the mesh."""

@@ -1,9 +1,20 @@
 """Request objects for the continuous-batching serving engine.
 
 A ``Request`` carries the prompt, per-request sampling parameters, and
-optional streaming callbacks; the engine mutates its lifecycle state
-(status, generated tokens, metrics timestamps) as it moves through
-queue -> slot -> finished.
+optional streaming callbacks; the engine mutates its lifecycle state as it
+moves through the token-budgeted step pipeline:
+
+    QUEUED -> PREFILLING -> RUNNING -> FINISHED
+       ^          |            |
+       +----------+------------+   (preempted back to the queue head)
+
+``prefill_cursor`` is the request's position in that pipeline: how many
+tokens of prompt + already-generated history have their KV written.  The
+engine advances it chunk-by-chunk under the step token budget; when the
+cursor reaches the full sequence length the request samples its first
+(next) token and joins the fused decode batch.  A preempted request's
+cursor resets — on re-admission it is restored to however many leading
+blocks the prefix cache still holds (resume-from-last-written-block).
 """
 from __future__ import annotations
 
@@ -16,9 +27,10 @@ from ..runtime.metrics import RequestMetrics
 
 class Status(enum.Enum):
     QUEUED = "queued"
-    RUNNING = "running"
+    PREFILLING = "prefilling"          # scheduled; prompt KV partially written
+    RUNNING = "running"                # prefill complete; in the decode batch
     FINISHED = "finished"
-    EVICTED = "evicted"                # timed out in queue / preempted
+    EVICTED = "evicted"                # timed out in queue
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,8 +63,12 @@ class Request:
     slot: int | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
     metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
+    # tokens of prompt + generated history whose KV is written (valid while
+    # scheduled; reset on preemption, restored from prefix-cache matches)
+    prefill_cursor: int = 0
     # times the paged engine preempted this request back to the queue
-    # (generated tokens are kept; it resumes by re-prefilling prompt+tokens)
+    # (generated tokens are kept; the resume re-prefills whatever the
+    # prefix cache no longer covers)
     n_preempted: int = 0
 
     @property
@@ -66,6 +82,11 @@ class Request:
     def _emit(self, token: int, now: float) -> None:
         if not self.tokens:
             self.metrics.first_token = now
+        else:
+            # inter-token gap as the user experiences it: includes any
+            # engine stall (long prefill in the step, preemption wait)
+            self.metrics.itl.append(now - self.metrics.last_token_at)
+        self.metrics.last_token_at = now
         self.tokens.append(token)
         self.metrics.n_tokens = len(self.tokens)
         if self.on_token is not None:

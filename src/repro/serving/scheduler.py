@@ -1,35 +1,143 @@
-"""Request queue (admission/eviction) and prefill/decode interleaving policy.
+"""Request queue (admission/eviction) and the token-budgeted step policy.
 
 Admission control is two-level: ``submit`` rejects outright when the queue is
 at capacity or the request can never fit the KV pool (prompt + max_new_tokens
 > pool capacity); queued requests past ``queue_timeout_s`` are evicted at the
 head of every engine step, bounding worst-case queue wait.
 
-The interleave policy bounds how many prefills run between consecutive
-decode steps (``max_prefill_per_step``), so a burst of arrivals cannot
-starve in-flight decodes — the classic continuous-batching latency/
-throughput trade (Orca / vLLM-style iteration-level scheduling).  When
-nothing is decoding, the bound is lifted: prefill-only work fills all free
-slots at once.
+Per-step scheduling is **token-budget accounting** (``plan_chunks``): every
+engine step may spend up to ``token_budget`` prompt tokens on prefill work,
+split into per-request *chunks*.  A prompt longer than the budget advances
+chunk-by-chunk across steps (the engine tracks a ``prefill_cursor`` per
+request), so one long prompt can no longer monopolize a step and stall every
+decoding request — the Sarathi/vLLM-style chunked-prefill schedule, here on
+top of the paper's 8:16+outlier compressed-weight serving path.  Priority
+order inside a step:
 
-Under the paged KV layout admission is additionally *block-aware*: a
-request is only scheduled while the pool's obtainable blocks (free list
-plus evictable prefix-cache entries) cover its whole prompt plus a decode
-lookahead margin, and when decode outgrows the arena anyway the engine
-preempts the youngest running request back to the queue head
-(``pick_preemption_victim``) rather than hard-failing — it resumes later
-by re-prefilling prompt + generated-so-far, which reproduces its token
-stream exactly (sampling keys are derived from (seed, token index)).
+  1. in-flight partial prefills, oldest admission first — they hold
+     rows/blocks, so finishing them releases capacity soonest;
+  2. new admissions from the queue head, strictly FIFO — the head is never
+     skipped (a long prompt at the head is admitted and simply takes more
+     steps), which is what makes the policy starvation-free.
+
+Chunk lengths are quantized to ``CHUNK_QUANTUM`` (except a sequence's final
+chunk), so cursor values — and with them the compiled (prefix_len, bucket)
+shape ladder of the chunked prefill function — stay small.
+
+``max_prefill_per_step`` (the old bounded-request-count interleave knob) is
+deprecated: ``resolve_token_budget`` maps it to the equivalent token budget
+(N requests of up to ``max_len`` tokens each) and warns once.
+
+Under the paged KV layout admission is additionally *block-aware*: a request
+is only scheduled while the pool's obtainable blocks (free list plus
+evictable prefix-cache entries) cover its NEXT CHUNK plus a decode lookahead
+margin — chunk-aware allocation, blocks arrive as the cursor advances — and
+when decode outgrows the arena anyway the engine preempts the youngest
+running request back to the queue head (``pick_preemption_victim``) rather
+than hard-failing.  Before releasing a victim's blocks the engine publishes
+its fully-written blocks to the prefix cache, so a resumed request matches
+them and restarts its cursor at the last fully-written block instead of
+re-prefilling prompt + generated from scratch (token streams are preserved
+exactly either way; sampling keys are derived from (seed, token index)).
 """
 from __future__ import annotations
 
 import collections
+import warnings
+from typing import Callable, Iterator
 
 from .request import Request, Status
+
+# chunk lengths (and therefore prefill cursors) are multiples of this,
+# except a sequence's final chunk — bounds the compiled shape ladder
+CHUNK_QUANTUM = 8
 
 
 class QueueFull(RuntimeError):
     """Raised by ServingEngine.submit when admission control rejects."""
+
+
+_budget_alias_warned = False
+
+
+def resolve_token_budget(token_budget: int | None,
+                         max_prefill_per_step: int | None,
+                         max_len: int) -> int:
+    """Resolve the engine's per-step prefill token budget.
+
+    ``max_prefill_per_step`` is the deprecated request-count knob; when
+    given it maps to the equivalent token budget — N requests of up to
+    ``max_len`` tokens each per step — and warns once per process.  With
+    neither knob set the default budget is ``2 * max_len`` (the historical
+    default of two full prefills between decode steps).
+    """
+    global _budget_alias_warned
+    if max_prefill_per_step is not None:
+        if not _budget_alias_warned:
+            warnings.warn(
+                "max_prefill_per_step is deprecated; pass token_budget "
+                "instead (mapping N requests/step to N * max_len tokens)",
+                DeprecationWarning, stacklevel=3)
+            _budget_alias_warned = True
+        if token_budget is None:
+            token_budget = max(int(max_prefill_per_step), 1) * max_len
+    if token_budget is None:
+        token_budget = 2 * max_len
+    token_budget = int(token_budget)
+    if token_budget < CHUNK_QUANTUM:
+        raise ValueError(f"token_budget must be >= {CHUNK_QUANTUM} "
+                         f"(the chunk quantum), got {token_budget}")
+    return token_budget
+
+
+def _chunk_take(budget: int, remaining: int, quantum: int) -> int:
+    """Tokens to schedule for one request: the whole remainder when it
+    fits, else the largest quantum multiple within budget (0 = no room)."""
+    take = min(budget, remaining)
+    if take < remaining:
+        take -= take % quantum
+    return take
+
+
+def plan_chunks(in_flight: list[tuple], queued: list[tuple],
+                token_budget: int, quantum: int,
+                try_admit: Callable) -> list[tuple]:
+    """One step's prefill schedule under a token budget.
+
+    ``in_flight``: [(key, remaining_tokens)] partial prefills in admission
+    order; ``queued``: [(key, seq_len)] FIFO.  ``try_admit(key, chunk)`` is
+    called for queue entries in order — it performs the layout-specific
+    admission (row/block allocation, prefix-cache match) and returns the
+    tokens actually left to compute (< seq_len on a prefix-cache hit), or
+    None when the request cannot be placed (planning then stops: the head
+    is deferred, never skipped, preserving FIFO).
+
+    Returns [(key, take)] with sum(take) <= token_budget and every take
+    positive and quantum-aligned unless it finishes its sequence.
+    """
+    budget = int(token_budget)
+    chunks: list[tuple] = []
+    for key, remaining in in_flight:
+        if budget <= 0:
+            break
+        take = _chunk_take(budget, remaining, quantum)
+        if take == 0:
+            break                       # head-of-line keeps its turn
+        chunks.append((key, take))
+        budget -= take
+    for key, seq_len in queued:
+        if budget <= 0:
+            break
+        want = _chunk_take(budget, seq_len, quantum)
+        if want == 0:
+            break
+        remaining = try_admit(key, want)
+        if remaining is None:
+            break                       # no capacity: defer the head, stop
+        take = min(want, remaining)
+        chunks.append((key, take))
+        budget -= take
+    return chunks
 
 
 class RequestQueue:
@@ -40,6 +148,10 @@ class RequestQueue:
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def __iter__(self) -> Iterator[Request]:
+        """FIFO view (head first) — the planner peeks without popping."""
+        return iter(self._q)
 
     def try_push(self, req: Request) -> bool:
         if len(self._q) >= self.max_size:
@@ -76,15 +188,6 @@ class RequestQueue:
                 kept.append(req)
         self._q = kept
         return evicted
-
-
-def admission_budget(n_queued: int, n_free_slots: int, n_running: int,
-                     max_prefill_per_step: int) -> int:
-    """How many requests to prefill before the next decode step."""
-    budget = min(n_queued, n_free_slots)
-    if n_running > 0:
-        budget = min(budget, max_prefill_per_step)
-    return budget
 
 
 def pick_preemption_victim(running: dict[int, Request]) -> int:

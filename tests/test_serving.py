@@ -100,7 +100,7 @@ def test_mixed_arrivals_join_running_batch(dense_params):
     early = _prompts(2, 16, seed=2)
     late = _prompts(2, 11, seed=3)           # odd length -> padded bucket
     engine = ServingEngine(CFG, dense_params, n_slots=4, max_len=64,
-                           max_prefill_per_step=2)
+                           token_budget=2 * 64)
     reqs = [engine.submit(p, SamplingParams(max_new_tokens=12)) for p in early]
     for _ in range(3):                        # decode a few tokens first
         engine.step()
