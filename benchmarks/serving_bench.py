@@ -190,6 +190,126 @@ def long_prompt_scenario(cfg, params, args) -> dict:
     return out
 
 
+def prefill_curve_scenario(cfg, params, args) -> dict:
+    """SLOW scenario (opt-in via --prefill-curve): very-long-prompt
+    prefill time vs prompt length, chunked through the RETIRED
+    gather-based path vs the in-place attend-over-pool path.
+
+    The gathered baseline reconstructs PR 4's ``forward_with_prefix``
+    schedule locally: every C-token chunk ships a gathered
+    [L, 1, cursor, KV, hd] prefix copy into the step, so prefilling P
+    tokens moves O(P^2/C) prefix bytes (and retraces once per cursor).
+    The in-place path is ``transformer.unified_step`` over a slot view:
+    the arena rides donated and the cursor is data, so per-chunk bytes
+    are constant.  Each point records both wall time (same chunks, same
+    prompt, 1 row, warm — compile excluded) and the ACCEPTANCE metric,
+    ``step_bytes``: compiled bytes-accessed of the first vs last chunk —
+    gathered grows with the cursor, in-place stays flat.  Wall times on a
+    CPU smoke model are flop-bound (the masked in-place attention still
+    computes over the whole arena row), so the bytes curve, not the
+    milliseconds, is where the asymptote shows at small scale; on real
+    HBM-bound serving shapes the bytes ARE the milliseconds.
+    """
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+    from repro.models.layers import linear, rms_norm
+    from repro.serving import SlotPoolView
+
+    C = args.curve_chunk
+    lengths = [int(x) for x in args.curve_lens.split(",")]
+    if any(P % C or P < C for P in lengths):
+        raise ValueError(f"--curve-lens {lengths} must be multiples of "
+                         f"--curve-chunk {C}")
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    rng = np.random.default_rng(args.seed + 3)
+
+    def gathered_chunk(params, tokens, pk, pv):
+        # the retired gather-based chunk primitive, kept ONLY as this
+        # benchmark's baseline
+        B, S = tokens.shape
+        P = pk.shape[2]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        positions = jnp.broadcast_to(P + jnp.arange(S)[None], (B, S))
+
+        def body(h, xs):
+            lp, pkl, pvl = xs
+            h, kv = tfm.block_forward(lp, h, positions, cfg,
+                                      prior_kv=(pkl, pvl))
+            return h, kv
+        x, (k, v) = jax.lax.scan(body, x, (params["layers"], pk, pv))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return linear(head, x), (k, v)
+
+    gathered_fn = jax.jit(gathered_chunk)
+    inplace_fn = jax.jit(
+        lambda p, k, v, cur, t: tfm.unified_step(
+            p, SlotPoolView(k, v, None, cur, jnp.full((1,), C, jnp.int32)),
+            {"tokens": t}, cfg),
+        donate_argnums=(1, 2))
+
+    def run_inplace(toks, P):
+        k = jnp.zeros((L, 1, P, KV, hd), cfg.dtype)
+        v = jnp.zeros((L, 1, P, KV, hd), cfg.dtype)
+        for c in range(0, P, C):
+            cur = jnp.asarray([c], jnp.int32)
+            logits, (k, v) = inplace_fn(params, k, v, cur, toks[:, c:c + C])
+        return logits
+
+    def run_gathered(toks, P):
+        pk = jnp.zeros((L, 1, 0, KV, hd), cfg.dtype)
+        pv = jnp.zeros((L, 1, 0, KV, hd), cfg.dtype)
+        for c in range(0, P, C):
+            logits, (k, v) = gathered_fn(params, toks[:, c:c + C], pk, pv)
+            pk = jnp.concatenate([pk, k], axis=2)
+            pv = jnp.concatenate([pv, v], axis=2)
+        return logits
+
+    from repro.launch.hlo_analysis import cost_summary
+
+    def step_bytes(P):
+        """Compiled bytes-accessed of the FIRST vs LAST chunk step — the
+        acceptance metric: the gathered step's bytes grow with the cursor
+        (its prefix operand is [L, 1, cursor, KV, hd]); the in-place
+        step's do not (the cursor is data, the arena operand is fixed)."""
+        toks_c = jnp.zeros((1, C), jnp.int32)
+        last = max(P - C, 0)
+        out = {}
+        for name, cur in (("first", 0), ("last", last)):
+            pk = jnp.zeros((L, 1, cur, KV, hd), cfg.dtype)
+            g = gathered_fn.lower(params, toks_c, pk, pk).compile()
+            k = jnp.zeros((L, 1, P, KV, hd), cfg.dtype)
+            v = jnp.zeros((L, 1, P, KV, hd), cfg.dtype)
+            i = inplace_fn.lower(params, k, v, jnp.asarray([cur], jnp.int32),
+                                 toks_c).compile()
+            out[f"gathered_{name}"] = cost_summary(g)["bytes_accessed"]
+            out[f"in_place_{name}"] = cost_summary(i)["bytes_accessed"]
+        return out
+
+    curve = []
+    for P in lengths:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, P)), jnp.int32)
+        point = {"prompt_len": P, "chunk": C}
+        for name, fn in (("in_place", run_inplace), ("gathered", run_gathered)):
+            fn(toks, P).block_until_ready()          # warm: compile excluded
+            t0 = time.perf_counter()
+            for _ in range(args.curve_reps):
+                fn(toks, P).block_until_ready()
+            point[f"{name}_s"] = (time.perf_counter() - t0) / args.curve_reps
+        point["speedup"] = point["gathered_s"] / max(point["in_place_s"], 1e-12)
+        point["step_bytes"] = sb = step_bytes(P)
+        g_growth = sb["gathered_last"] / max(sb["gathered_first"], 1.0)
+        i_growth = sb["in_place_last"] / max(sb["in_place_first"], 1.0)
+        print(f"prefill-curve P={P:5d} chunk={C}: in-place "
+              f"{point['in_place_s']*1e3:8.1f}ms vs gathered "
+              f"{point['gathered_s']*1e3:8.1f}ms ({point['speedup']:.2f}x); "
+              f"step-bytes first->last chunk: gathered {g_growth:.2f}x vs "
+              f"in-place {i_growth:.2f}x")
+        curve.append(point)
+    return {"chunk": C, "points": curve}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-paper")
@@ -236,6 +356,18 @@ def main(argv=None):
     ap.add_argument("--long-short-requests", type=int, default=6)
     ap.add_argument("--long-len", type=int, default=256,
                     help="long-prompt length for the chunked scenario")
+    # very-long-prompt prefill curve (slow; opt-in)
+    ap.add_argument("--prefill-curve", action="store_true",
+                    help="SLOW: record prefill-time-vs-prompt-length "
+                         "curves (retired gathered path vs in-place "
+                         "attend-over-pool) into the results file")
+    ap.add_argument("--curve-lens", default="128,256,512,1024",
+                    help="comma-separated prompt lengths for "
+                         "--prefill-curve")
+    ap.add_argument("--curve-chunk", type=int, default=64,
+                    help="chunk size for --prefill-curve")
+    ap.add_argument("--curve-reps", type=int, default=3,
+                    help="timed repetitions per --prefill-curve point")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="machine-readable results file ('' to skip)")
     args = ap.parse_args(argv)
@@ -252,6 +384,9 @@ def main(argv=None):
         args.long_len = min(args.long_len, 128)
         args.long_requests = min(args.long_requests, 1)
         args.long_short_requests = min(args.long_short_requests, 4)
+        args.curve_lens = "64,128"
+        args.curve_chunk = min(args.curve_chunk, 16)
+        args.curve_reps = 1
 
     cfg = bench_cfg(args)
     zoo = get_model(cfg)
@@ -295,6 +430,10 @@ def main(argv=None):
     if not args.no_long_prompt:
         long_prompt = long_prompt_scenario(cfg, params, args)
 
+    prefill_curve = None
+    if args.prefill_curve:
+        prefill_curve = prefill_curve_scenario(cfg, params, args)
+
     if args.out:
         payload = {
             "meta": {"model": cfg.name, "family": cfg.family,
@@ -312,6 +451,7 @@ def main(argv=None):
             "poisson": results,
             "shared_prefix": shared,
             "long_prompt": long_prompt,
+            "prefill_curve": prefill_curve,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

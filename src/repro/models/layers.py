@@ -145,22 +145,48 @@ def sdpa(q, k, v, *, causal: bool = True, window: int | None = None,
     return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
 
 
+def attend_length_masked(q, k_cache, v_cache, q_offset, *,
+                         window: int | None = None) -> jax.Array:
+    """Length-masked attention over statically-sized caches: the serving
+    in-place attention for contiguous (slot) KV buffers.
+
+    ``q`` [B,S,H,hd] holds S fresh queries per row; query i of row b sits
+    at absolute position ``q_offset[b] + i`` and attends to cache
+    positions ``j <= q_offset[b] + i`` (window-limited when ``window`` is
+    set) of ``k_cache``/``v_cache`` [B,T,KV,hd].  The caches are full
+    arenas with static T; everything past each query's own position —
+    stale tokens of a previous occupant, this step's not-yet-causal
+    writes, allocation padding — is masked with a finite ``-1e30`` whose
+    exp underflows to exactly 0.0, so masked garbage contributes nothing.
+
+    S=1 with ``q_offset = filled_len - 1`` is classic decode attention;
+    S>1 with ``q_offset = prefill cursor`` is an in-place prefill chunk.
+    """
+    from ..parallel import policy as pol
+    B, S, H, hd = q.shape
+    k = _repeat_kv(k_cache, H)
+    v = _repeat_kv(v_cache, H)
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf, k.astype(jnp.float32))
+    scores = pol.shard(scores, ("fsdp", "model", None, None))
+    qpos = q_offset[:, None] + jnp.arange(S)[None]            # [B,S]
+    kpos = jnp.arange(k_cache.shape[1])                       # [T]
+    valid = kpos[None, None, :] <= qpos[:, :, None]           # [B,S,T]
+    if window is not None:
+        valid &= kpos[None, None, :] > qpos[:, :, None] - window
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
     """Single-token attention: q [B,1,H,hd] over caches [B,S,KV,hd].
 
-    ``cache_len`` masks positions >= len (static S buffers, dynamic fill)."""
-    from ..parallel import policy as pol
-    B, _, H, hd = q.shape
-    k = _repeat_kv(k_cache, H)
-    v = _repeat_kv(v_cache, H)
-    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, H, hd)
-    scores = jnp.einsum("bhd,bshd->bhs", qf, k.astype(jnp.float32))
-    scores = pol.shard(scores, ("fsdp", "model", None))
-    valid = jnp.arange(k_cache.shape[1])[None] < cache_len[:, None]  # [B,S]
-    scores = jnp.where(valid[:, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
-    return out.reshape(B, 1, H, hd).astype(q.dtype)
+    ``cache_len`` masks positions >= len (static S buffers, dynamic fill).
+    The S=1 specialization of ``attend_length_masked`` (kept as the
+    lock-step decode entry point for the enc-dec family)."""
+    return attend_length_masked(q, k_cache, v_cache, cache_len - 1)
 
 
 # --------------------------------------------------------------------------

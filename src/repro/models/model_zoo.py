@@ -41,7 +41,7 @@ def get_model(cfg) -> ModelZoo:
             init=lambda key: tfm.init_params(key, cfg),
             loss=lambda p, b, unroll=False: tfm.loss_fn(p, b, cfg, unroll),
             prefill=lambda p, b, unroll=False: tfm.prefill(p, b, cfg, unroll),
-            decode=lambda p, c, b, unroll=False: tfm.decode_step(p, c, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: tfm.decode_lockstep(p, c, b, cfg, unroll),
             init_cache=lambda bs, ml: tfm.init_cache(cfg, bs, ml),
         )
     if fam == "ssm":

@@ -10,10 +10,25 @@ Layer weights are stacked [L, ...]; the forward pass runs either
 Python loop (``unroll=True``, used by the dry-run so XLA cost analysis counts
 every layer — see DESIGN.md §6).
 
-Three entry points per the launch contract:
+Entry points per the launch contract:
   loss_fn(params, batch, cfg)                          — training
   prefill(params, batch, cfg) -> (logits, caches)      — inference prefill
-  decode_step(params, caches, batch, cfg) -> (logits, caches)
+  decode_lockstep(params, caches, batch, cfg)          — lock-step decode
+
+Serving runs on ONE attention path: ``unified_step`` /
+``attend_over_pool``.  Every serving step — chunked prefill (q_len =
+chunk), one-shot prefill (q_len = prompt, cursor = 0), and fused decode
+(q_len = 1) — writes its fresh KV into the engine's KV arena (slot rows or
+paged blocks, addressed by a pool view from ``serving/cache_pool.py`` /
+``serving/paged/pool.py``) and attends IN PLACE against that arena with
+the per-request cursor as a length mask.  Nothing ever gathers a copy of
+the already-written prefix, so a prefill chunk's HBM traffic is
+independent of how much prefix the request has written — O(P) total over
+a P-token prompt instead of the O(P^2/budget) the old gather-based
+chunk path paid.  ``decode_lockstep`` and ``block_decode`` are thin
+adapters over the same primitive for the legacy lock-step loop (and
+zamba's shared-attention block), so there is exactly one masking /
+RoPE-offset / write implementation.
 
 Sharding: the forward/decode paths are placement-agnostic.  Training and
 the dry-run shard through the activation policy (parallel/policy.py, a
@@ -30,8 +45,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .layers import (activation, apply_rope, decode_attention, dense_init,
-                     linear, rms_norm, sdpa, split_keys)
+from .layers import (activation, apply_rope, attend_length_masked,
+                     dense_init, linear, rms_norm, sdpa, split_keys)
 from . import moe as moe_lib
 
 
@@ -111,11 +126,13 @@ def _mlp(lp, x, cfg):
 
 def block_forward(lp, x, positions, cfg, q_chunks: int = 1, causal: bool = True,
                   prior_kv=None):
-    """Full-sequence block (train / prefill). Returns (y, (k, v)).
+    """Full-sequence block (train / legacy prefill). Returns (y, (k, v)).
 
-    ``prior_kv`` = (k, v) [B, P, KV, hd] of an already-computed context
-    (paged prefix-cache hit): queries attend to prior + fresh keys with a
-    ``q_offset`` of P, and only the fresh suffix KV is returned.
+    ``prior_kv`` = (k, v) [B, P, KV, hd] of an already-computed context:
+    queries attend to prior + fresh keys with a ``q_offset`` of P, and
+    only the fresh suffix KV is returned.  The serving engine no longer
+    uses this (chunks attend in place via ``attend_over_pool``); it stays
+    as the gather-style reference that benchmarks measure against.
 
     Activation constraints pin the batch (fsdp) sharding at block boundaries —
     without them GSPMD can flip to a d_model-sharded/batch-replicated layout
@@ -141,102 +158,163 @@ def block_forward(lp, x, positions, cfg, q_chunks: int = 1, causal: bool = True,
     return x, (k, v)
 
 
+# --------------------------------------------------------------------------
+# the unified serving attention path: write into the pool, attend in place
+# --------------------------------------------------------------------------
+
+def _cursor_vec(pos, B: int):
+    """[B] int32 cursor from a scalar (lock-step) or per-row position."""
+    if jnp.ndim(pos) == 1:
+        return pos.astype(jnp.int32)
+    return jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
+
+
+def _pool_positions(cursor, S: int, cfg):
+    """RoPE positions for S fresh tokens per lane starting at ``cursor``
+    — [B, S], or [3, B, S] under M-RoPE (t/h/w share the text position
+    on the serving path)."""
+    base = cursor[:, None] + jnp.arange(S)[None]
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(base[None], (3,) + base.shape)
+    return base
+
+
+def attend_over_pool(q, pool_view, *, cursor=None, q_offset=None,
+                     window: int | None = None, backend: str | None = None):
+    """THE serving attention primitive: ``q`` [B, S, H, hd] attends
+    directly against a KV pool arena — slot rows or paged blocks — with
+    the per-request cursor as a length mask.
+
+    ``pool_view`` is a per-layer ``SlotPoolView`` / ``PagedPoolView``
+    (serving/cache_pool.py, serving/paged/pool.py) whose ``k``/``v`` hold
+    ONE layer's arena slice and whose addressing fields say where each
+    batch lane's sequence lives.  Query i of lane b sits at absolute
+    position ``q_offset[b] + i`` and sees arena positions
+    ``j <= q_offset[b] + i`` (window-limited); ``q_offset`` defaults to
+    ``cursor`` (both default to ``pool_view.cursor``), which is exactly
+    right when the step's fresh KV was scattered at the cursor before
+    attending — causality then hides this step's not-yet-visible writes,
+    stale tokens of previous slot/block occupants, and padding, so
+    chunked prefill (S = chunk), one-shot prefill (S = prompt, cursor =
+    0), and fused decode (S = 1) are all the same computation.
+
+    Never materializes gathered prefix context: per-step prefix HBM
+    traffic is bounded by the arena rows/blocks touched, independent of
+    how much prefix each lane has already written.
+    """
+    cursor = pool_view.cursor if cursor is None else cursor
+    q_offset = cursor if q_offset is None else q_offset
+    if pool_view.block_tables is not None:
+        from ..serving.paged.paged_attention import paged_attention
+        return paged_attention(q, pool_view.k, pool_view.v,
+                               pool_view.block_tables, q_offset,
+                               window=window, backend=backend)
+    k_rows, v_rows = pool_view.lane_kv(pool_view.k, pool_view.v)
+    return attend_length_masked(q, k_rows, v_rows, q_offset, window=window)
+
+
+def _block_step(lp, x, k_l, v_l, view, positions, cfg, attn_backend):
+    """One block of the unified step: project q/k/v at the lane cursor
+    positions, scatter the fresh KV into the layer's arena slice (in
+    place under donation), and attend over the pool.  Returns
+    (y, k_l, v_l) with the updated arena slices."""
+    from ..parallel import policy as pol
+    B, S, _ = x.shape
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(lp, h, cfg, positions)
+    q = pol.shard(q, ("fsdp", None, "model", None))
+    k_l, v_l = view.write_layer(k_l, v_l, k, v)
+    attn = attend_over_pool(q, dataclasses.replace(view, k=k_l, v=v_l),
+                            window=cfg.window, backend=attn_backend)
+    x = x + linear(lp["wo"], attn.reshape(B, S, -1))
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + _mlp(lp, h, cfg)
+    return x, k_l, v_l
+
+
+def unified_step(params, view, batch, cfg, *, attn_backend=None,
+                 unroll: bool = False):
+    """One attend-in-place step over a KV pool: the only serving
+    attention path.
+
+    ``batch["tokens"]`` [B, S] are the next S tokens of each lane,
+    starting at ``view.cursor`` (per-lane RoPE/mask offset — chunk token
+    i sits at absolute position cursor + i).  Fresh KV is written into
+    the view's arenas layer by layer (the engine donates them, so the
+    multi-GB buffers update in place), and attention reads the arena
+    directly with the cursor as a length mask.  Covers every serving
+    shape: S = prompt & cursor = 0 is one-shot prefill, S = chunk is
+    chunked prefill (numerically the one-shot prefill it replaces), and
+    S = 1 over all lanes is the fused decode.
+
+    Returns (logits [B, S, V], (k, v)) — the updated [L, ...] arenas.
+    """
+    from ..parallel import policy as pol
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = _pool_positions(view.cursor, S, cfg)
+    x = pol.shard(x, ("fsdp", None, None))
+
+    if unroll:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, k_l, v_l = _block_step(lp, x, view.k[i], view.v[i], view,
+                                      positions, cfg, attn_backend)
+            ks.append(k_l)
+            vs.append(v_l)
+        k, v = jnp.stack(ks), jnp.stack(vs)
+    else:
+        def body(h, xs):
+            lp, k_l, v_l = xs
+            h, k_l, v_l = _block_step(lp, h, k_l, v_l, view, positions,
+                                      cfg, attn_backend)
+            return h, (k_l, v_l)
+        x, (k, v) = jax.lax.scan(body, x, (params["layers"], view.k, view.v))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = pol.shard(linear(head, x), ("fsdp", None, "model"))
+    return logits, (k, v)
+
+
 def block_decode(lp, x, k_cache, v_cache, pos, cfg):
-    """One-token block. x: [B,1,d]; caches [B,Smax,KV,hd].
-
-    ``pos`` is either a scalar filled length (lock-step batch: every row sits
-    at the same position) or a [B] vector of per-row filled lengths
-    (slot-indexed caches — the serving engine's continuous batch, where each
-    slot is at a different point in its sequence)."""
-    from ..parallel import policy as pol
+    """One-token block over contiguous caches. x: [B,1,d]; caches
+    [B,Smax,KV,hd]; ``pos`` a scalar (lock-step batch) or [B] vector of
+    filled lengths.  A thin adapter over the unified in-place block for
+    lock-step callers outside the engine (zamba's shared-attention
+    block)."""
+    from ..serving.cache_pool import SlotPoolView
     B = x.shape[0]
-    per_slot = jnp.ndim(pos) == 1
-    x = pol.shard(x, ("fsdp", None, None))
-    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
-    base = pos[:, None] if per_slot else jnp.broadcast_to(pos, (B, 1))
-    if cfg.mrope_sections is not None:
-        positions = jnp.broadcast_to(base[None], (3, B, 1))
-    else:
-        positions = base
-    q, k, v = _project_qkv(lp, h, cfg, positions)
-    q = pol.shard(q, ("fsdp", None, "model", None))
-    if per_slot:
-        upd = lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(c, u, p, 0)
-        k_cache = jax.vmap(upd)(k_cache, k.astype(k_cache.dtype), pos)
-        v_cache = jax.vmap(upd)(v_cache, v.astype(v_cache.dtype), pos)
-        cache_len = pos + 1
-    else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, 1)
-        cache_len = jnp.full((B,), pos + 1, jnp.int32)
-    if cfg.window is not None:
-        # sliding window: mask everything older than `window`
-        lo = jnp.maximum(pos + 1 - cfg.window, 0)
-        valid_from = jnp.broadcast_to(lo, (B,)).astype(jnp.int32)
-        attn = _windowed_decode(q, k_cache, v_cache, cache_len, valid_from)
-    else:
-        attn = decode_attention(q, k_cache, v_cache, cache_len)
-    x = x + linear(lp["wo"], attn.reshape(B, 1, -1))
-    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
-    x = x + _mlp(lp, h, cfg)
-    return x, k_cache, v_cache
+    cursor = _cursor_vec(pos, B)
+    view = SlotPoolView(k=None, v=None, rows=None, cursor=cursor,
+                        n_new=jnp.ones((B,), jnp.int32))
+    return _block_step(lp, x, k_cache, v_cache, view,
+                       _pool_positions(cursor, 1, cfg), cfg, None)
 
 
-def block_decode_paged(lp, x, k_arena, v_arena, block_tables, pos, cfg,
-                       attn_backend=None):
-    """One-token block over a paged KV arena. x: [B,1,d]; arenas
-    [n_blocks, block_size, KV, hd]; ``block_tables`` [B, nb] maps each
-    row's sequence position p to physical block ``bt[b, p // bs]``;
-    ``pos`` [B] is each row's filled length (= write position).
+def decode_lockstep(params, caches, batch, cfg, unroll: bool = False):
+    """One new token for every sequence through the unified primitive —
+    the model-zoo decode contract for the legacy lock-step loop and the
+    dry-run.  batch: {"tokens": [B, 1]}.
 
-    The fresh k/v is scattered into each row's current block, then
-    attention gathers over the row's block list (serving/paged/
-    paged_attention.py) instead of a contiguous slot."""
-    from ..parallel import policy as pol
-    from ..serving.paged.paged_attention import paged_attention
-    B = x.shape[0]
-    n_blocks, bs = k_arena.shape[0], k_arena.shape[1]
-    x = pol.shard(x, ("fsdp", None, None))
-    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
-    base = pos[:, None]
-    if cfg.mrope_sections is not None:
-        positions = jnp.broadcast_to(base[None], (3, B, 1))
-    else:
-        positions = base
-    q, k, v = _project_qkv(lp, h, cfg, positions)
-    q = pol.shard(q, ("fsdp", None, "model", None))
-    # write: flat token slot of position p is bt[b, p // bs] * bs + p % bs
-    slot = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
-                               axis=1)[:, 0] * bs + pos % bs       # [B]
-    flat_shape = (n_blocks * bs, *k_arena.shape[2:])
-    k_arena = k_arena.reshape(flat_shape).at[slot].set(
-        k[:, 0].astype(k_arena.dtype)).reshape(k_arena.shape)
-    v_arena = v_arena.reshape(flat_shape).at[slot].set(
-        v[:, 0].astype(v_arena.dtype)).reshape(v_arena.shape)
-    attn = paged_attention(q, k_arena, v_arena, block_tables, pos + 1,
-                           window=cfg.window, backend=attn_backend)
-    x = x + linear(lp["wo"], attn.reshape(B, 1, -1))
-    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
-    x = x + _mlp(lp, h, cfg)
-    return x, k_arena, v_arena
-
-
-def _windowed_decode(q, k_cache, v_cache, cache_len, valid_from):
-    import math as _m
-    from ..parallel import policy as pol
-    from .layers import _repeat_kv
-    B, _, H, hd = q.shape
-    k = _repeat_kv(k_cache, H)
-    v = _repeat_kv(v_cache, H)
-    qf = (q.astype(jnp.float32) / _m.sqrt(hd)).reshape(B, H, hd)
-    scores = jnp.einsum("bhd,bshd->bhs", qf, k.astype(jnp.float32))
-    scores = pol.shard(scores, ("fsdp", "model", None))
-    ar = jnp.arange(k_cache.shape[1])[None]
-    valid = (ar < cache_len[:, None]) & (ar >= valid_from[:, None])
-    scores = jnp.where(valid[:, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
-    return out.reshape(B, 1, H, hd).astype(q.dtype)
+    caches: {"k"/"v": [L, B, Smax, KV, hd], "pos": filled length — a
+    scalar (lock-step batch) or a [B] vector (each row at its own
+    sequence position)}.  The [B, Smax] cache layout IS a slot arena with
+    one slot per row, so this is ``unified_step`` with an identity lane
+    map and S = 1.
+    """
+    from ..serving.cache_pool import SlotPoolView
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = caches["pos"]
+    view = SlotPoolView(k=caches["k"], v=caches["v"], rows=None,
+                        cursor=_cursor_vec(pos, B),
+                        n_new=jnp.ones((B,), jnp.int32))
+    logits, (k, v) = unified_step(params, view, {"tokens": tokens}, cfg,
+                                  unroll=unroll)
+    return logits[:, -1], {"k": k, "v": v, "pos": pos + 1}
 
 
 # --------------------------------------------------------------------------
@@ -340,109 +418,3 @@ def prefill(params, batch, cfg, unroll: bool = False):
     S = k.shape[2]
     caches = {"k": k, "v": v, "pos": jnp.array(S, jnp.int32)}
     return logits[:, -1], caches
-
-
-def decode_step(params, caches, batch, cfg, unroll: bool = False):
-    """One new token for every sequence. batch: {"tokens": [B, 1]}.
-
-    caches: {"k"/"v": [L, B, Smax, KV, hd], "pos": filled length — a scalar
-    (lock-step batch) or a [B] vector (slot-indexed caches: each row of the
-    batch is an independent serving slot at its own sequence position)}.
-    """
-    tokens = batch["tokens"]
-    B = tokens.shape[0]
-    x = jnp.take(params["embed"], tokens, axis=0)        # [B,1,d]
-    pos = caches["pos"]
-
-    if unroll:
-        ks, vs = [], []
-        for i in range(cfg.n_layers):
-            lp = jax.tree.map(lambda p: p[i], params["layers"])
-            x, kc, vc = block_decode(lp, x, caches["k"][i], caches["v"][i], pos, cfg)
-            ks.append(kc); vs.append(vc)
-        new_k, new_v = jnp.stack(ks), jnp.stack(vs)
-    else:
-        def body(h, xs):
-            lp, kc, vc = xs
-            h, kc, vc = block_decode(lp, h, kc, vc, pos, cfg)
-            return h, (kc, vc)
-        x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], caches["k"], caches["v"]))
-
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = linear(head, x)[:, 0]                        # [B, V]
-    return logits, {"k": new_k, "v": new_v, "pos": pos + 1}
-
-
-def forward_with_prefix(params, batch, cfg, prefix_k, prefix_v):
-    """Mid-sequence prefill chunk against already-computed context.
-
-    This is the serving engine's one chunked-forward primitive, covering
-    both cases that continue a sequence whose leading KV already exists:
-    a paged prefix-cache hit (the context was computed by an earlier
-    request) and a chunked-prefill step (the context is this request's own
-    earlier chunks — slot or paged layout, the caller gathers it either
-    way).
-
-    ``batch["tokens"]`` [B, S] are the next S tokens of each sequence;
-    ``prefix_k/v`` [L, B, P, KV, hd] is the KV of the P tokens before
-    them.  RoPE positions and the causal/sliding-window mask are offset by
-    P, so chunk token i sits at absolute position P + i and attends to the
-    whole prefix plus its own causal context — numerically the same as
-    prefilling the full sequence in one shot, minus the FLOPs/HBM for the
-    P already-written positions.  Where the KV lands (slot offset or block
-    table slots) is the pools' concern; this function only returns the
-    chunk's fresh KV.
-
-    Returns (logits [B, S, V], (k, v) chunk caches [L, B, S, KV, hd]).
-    """
-    from ..parallel import policy as pol
-    tokens = batch["tokens"]
-    B, S = tokens.shape
-    P = prefix_k.shape[2]
-    x = jnp.take(params["embed"], tokens, axis=0)
-    positions = jnp.broadcast_to(P + jnp.arange(S)[None], (B, S))
-    if cfg.mrope_sections is not None:
-        positions = jnp.broadcast_to(positions[None], (3, B, S))
-    x = pol.shard(x, ("fsdp", None, None))
-    q_chunks = _auto_q_chunks(S)
-
-    def body(h, xs):
-        lp, pk, pv = xs
-        h, kv = block_forward(lp, h, positions, cfg, q_chunks=q_chunks,
-                              prior_kv=(pk, pv))
-        return h, kv
-    x, (k, v) = jax.lax.scan(body, x, (params["layers"], prefix_k, prefix_v))
-
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = pol.shard(linear(head, x), ("fsdp", None, "model"))
-    return logits, (k, v)
-
-
-def decode_step_paged(params, caches, batch, cfg, attn_backend=None):
-    """One new token for every row over the paged arena.
-
-    caches: {"k"/"v": [L, n_blocks, block_size, KV, hd] arenas,
-    "block_tables": [B, nb] int32, "pos": [B] filled lengths}.  Mirrors
-    ``decode_step`` but consumes block tables instead of per-slot
-    contiguous buffers; rows at different sequence positions (and with
-    non-contiguous physical blocks) advance in one fused step.
-    """
-    tokens = batch["tokens"]
-    x = jnp.take(params["embed"], tokens, axis=0)        # [B,1,d]
-    bt, pos = caches["block_tables"], caches["pos"]
-
-    def body(h, xs):
-        lp, kc, vc = xs
-        h, kc, vc = block_decode_paged(lp, h, kc, vc, bt, pos, cfg,
-                                       attn_backend=attn_backend)
-        return h, (kc, vc)
-    x, (new_k, new_v) = jax.lax.scan(
-        body, x, (params["layers"], caches["k"], caches["v"]))
-
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = linear(head, x)[:, 0]                        # [B, V]
-    return logits, {"k": new_k, "v": new_v, "block_tables": bt,
-                    "pos": pos + 1}

@@ -21,12 +21,12 @@ structured-outlier deployment) are served by the same engine.
 """
 
 from .cache_pool import (CachePoolError, CapacityError, DoubleFree,
-                         KVCachePool, SlotKVPool)
+                         KVCachePool, SlotKVPool, SlotPoolView)
 from .engine import KV_LAYOUTS, ServingEngine, SUPPORTED_FAMILIES
-from .paged import OutOfBlocks, PagedKVPool
+from .paged import OutOfBlocks, PagedKVPool, PagedPoolView
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .scheduler import (CHUNK_QUANTUM, QueueFull, RequestQueue, plan_chunks,
-                        resolve_token_budget)
+                        resolve_token_budget, validate_token_budget)
 from .trace import (TraceRequest, load_trace, long_prompt_trace,
                     poisson_trace, replay, save_trace)

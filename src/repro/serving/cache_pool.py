@@ -1,12 +1,16 @@
-"""KV cache pools: the slot layout, and the protocol both layouts satisfy.
+"""KV cache pools: the slot layout, the protocol both layouts satisfy, and
+the slot ``PoolView`` the unified attention primitive consumes.
 
 ``SlotKVPool`` is the original contiguous layout: one allocation at engine
 start of k/v buffers [L, n_slots, max_len, KV, hd] plus a per-slot
 filled-position vector [n_slots].  Requests are assigned a slot for their
-lifetime; prefill KV is scattered into the slot at the request's cursor
-(chunked prefill writes each chunk at its own offset), decode steps write at
-each slot's own position (models/transformer.py slot-indexed decode).
-Buffer shapes never change, so the decode step compiles exactly once — at
+lifetime.  All KV writes happen INSIDE the jitted step functions: the pool
+hands the engine a ``SlotPoolView`` (arena + lane->slot rows + cursors)
+and ``models/transformer.unified_step`` scatters each chunk/decode token's
+fresh KV at the cursor and attends in place against the arena with the
+cursor as a length mask — no gathered prefix copies, so per-step HBM
+traffic is independent of how much prefix a request has already written.
+Buffer shapes never change, so each step shape compiles exactly once — at
 the cost of reserving ``max_len`` tokens of HBM per slot whether a request
 uses them or not.  ``serving/paged/`` removes that reservation.
 
@@ -23,8 +27,8 @@ exceptions, not ``assert``, so the checks survive ``python -O``.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Protocol, runtime_checkable
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -48,11 +52,15 @@ class CapacityError(CachePoolError):
 class KVCachePool(Protocol):
     """What the engine requires of a KV layout.
 
-    Attributes: ``k``/``v`` device buffers consumed by the jitted decode,
-    ``pos`` per-lane filled positions, ``n_slots`` decode-batch width,
-    ``n_free`` free concurrency units, ``max_request_tokens`` the longest
-    admissible request, ``gather_prefix`` the chunked-prefill context
-    fetch.  Layout-specific admission/write paths stay on the concrete
+    Attributes: ``k``/``v`` device arenas consumed (donated) by the jitted
+    step functions, ``pos`` per-lane filled positions, ``n_slots``
+    decode-batch width, ``n_free`` free concurrency units,
+    ``max_request_tokens`` the longest admissible request.  The step
+    lifecycle is: the engine builds a pool view (``chunk_view`` /
+    ``decode_view``) whose arenas ride through ``transformer.unified_step``
+    donated-in-place, then ``adopt``s the returned arenas and advances
+    positions (``advance_prefill`` after a chunk, ``advance_decode`` after
+    a fused decode).  Layout-specific admission paths stay on the concrete
     classes; the engine dispatches on ``kv_layout`` for those.
     """
     n_slots: int
@@ -65,19 +73,71 @@ class KVCachePool(Protocol):
 
     def release(self, slot: int) -> None: ...
 
-    def update(self, caches: dict, active_mask) -> None: ...
+    def adopt(self, k, v) -> None: ...
+
+    def advance_prefill(self, rows: list[int], ends: list[int]) -> None: ...
+
+    def advance_decode(self, active_mask) -> None: ...
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _scatter_tokens(pool, vals, slots):
-    """Write ``vals [L, T, KV, hd]`` at flat token ``slots [T]`` of the pool
-    (viewed as [L, n_slots*max_len, KV, hd]), in place (donated).  Indices
-    past the flat extent are dropped — batch/bucket padding routes there, so
-    one compiled scatter per (T,) shape serves every (slot, offset) mix."""
-    L, ns, ml = pool.shape[:3]
-    flat = pool.reshape(L, ns * ml, *pool.shape[3:])
-    flat = flat.at[:, slots].set(vals.astype(pool.dtype), mode="drop")
-    return flat.reshape(pool.shape)
+@dataclasses.dataclass(frozen=True)
+class SlotPoolView:
+    """What ``transformer.attend_over_pool`` sees of a slot-layout pool:
+    the arena itself plus lane addressing — NOT a gathered copy of
+    context.  Constructed inside the engine's traced step functions, so
+    every field is a tracer at use time.
+
+    ``k``/``v`` are the full [L, n_slots, max_len, KV, hd] arenas at step
+    level; inside the per-layer scan the transformer rebinds them to one
+    layer's [n_slots, max_len, KV, hd] slice (``dataclasses.replace``).
+    ``rows`` [B] maps each batch lane to its arena slot (values >=
+    n_slots are padding lanes whose writes drop); ``rows=None`` means the
+    batch IS the arena, lane i == slot i (the fused decode).  ``cursor``
+    [B] counts tokens already written per lane; ``n_new`` [B] is how many
+    of this step's S token positions are real for the lane (the rest are
+    bucket padding: their writes are dropped and their queries' outputs
+    discarded by the engine).
+    """
+    k: Any
+    v: Any
+    rows: Any | None
+    cursor: Any
+    n_new: Any
+
+    @property
+    def block_tables(self):
+        return None                       # duck-type marker: slot layout
+
+    def lane_kv(self, k_l, v_l):
+        """Per-lane [B, max_len, KV, hd] arena rows for attention.  With
+        ``rows=None`` the arena batch dim is used directly (no gather on
+        the fused-decode hot path); otherwise a B-row gather whose cost is
+        independent of how much prefix the rows have written."""
+        if self.rows is None:
+            return k_l, v_l
+        return k_l[self.rows], v_l[self.rows]
+
+    def write_layer(self, k_l, v_l, fresh_k, fresh_v):
+        """Scatter fresh [B, S, KV, hd] KV into one layer's arena slice at
+        each lane's cursor, in place under donation.  Real (lane, i<n_new)
+        pairs land at flat slot ``rows[b] * max_len + cursor[b] + i``;
+        padding maps past the arena extent and is dropped, so the compiled
+        scatter depends only on (B, S)."""
+        ns, ml = k_l.shape[0], k_l.shape[1]
+        B, S = fresh_k.shape[:2]
+        rows = jnp.arange(ns) if self.rows is None else self.rows
+        p = self.cursor[:, None] + jnp.arange(S)[None]        # [B,S]
+        oob = ns * ml
+        flat_idx = rows[:, None] * ml + p
+        valid = (jnp.arange(S)[None] < self.n_new[:, None]) & (p < ml)
+        flat_idx = jnp.where(valid, flat_idx, oob).reshape(-1)
+        def scat(arena, vals):
+            flat = arena.reshape(ns * ml, *arena.shape[2:])
+            flat = flat.at[flat_idx].set(
+                vals.reshape(B * S, *vals.shape[2:]).astype(arena.dtype),
+                mode="drop")
+            return flat.reshape(arena.shape)
+        return scat(k_l, fresh_k), scat(v_l, fresh_v)
 
 
 class SlotKVPool:
@@ -87,7 +147,7 @@ class SlotKVPool:
         L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         shape = (L, n_slots, max_len, KV, hd)
         # arenas are committed to the placement's KV-head-sharded layout at
-        # birth; the jitted decode then updates them shard-local in place
+        # birth; the jitted steps then update them shard-local in place
         self.k = pl.place_kv(jnp.zeros(shape, cfg.dtype))
         self.v = pl.place_kv(jnp.zeros(shape, cfg.dtype))
         self.pos = pl.place_replicated(jnp.zeros((n_slots,), jnp.int32))
@@ -115,51 +175,39 @@ class SlotKVPool:
     # kept for existing callers; same semantics as release
     free = release
 
-    # ---------------------------------------------------------------- data
-    def write_prefill_group(self, slots: list[int], k, v,
-                            lengths: list[int], offset: int = 0) -> None:
-        """Scatter a prefill-chunk group into its slots at ``offset``.
+    # ---------------------------------------------------------------- views
+    def lane_rows(self, rows: list[int], n_rows_padded: int) -> np.ndarray:
+        """Host lane->slot map for a chunk group; padding lanes point past
+        the arena (their writes drop, their gathers clamp harmlessly)."""
+        out = np.full((n_rows_padded,), self.n_slots, np.int32)
+        out[:len(rows)] = rows
+        return out
 
-        ``k``/``v``: [L, B, S_bucket, KV, hd] with B >= len(slots) (batch
-        pad) and S_bucket >= each row's chunk length (bucket pad).  Real
-        (slot, position) pairs map into the flat pool; every pad element
-        maps past the pool's extent and is dropped by the scatter, so the
-        compiled shape depends only on (B, S_bucket) — not on the offset,
-        which is what keeps chunked prefill at one compile per bucket."""
-        L, B, S = k.shape[:3]
-        if offset + max(lengths) > self.max_len:
+    def chunk_end_check(self, cursor: int, lengths: list[int]) -> None:
+        if cursor + max(lengths) > self.max_len:
             raise CapacityError(
-                f"prefill of {max(lengths)} tokens at offset {offset} "
+                f"prefill of {max(lengths)} tokens at offset {cursor} "
                 f"exceeds slot capacity {self.max_len}")
-        oob = self.n_slots * self.max_len          # dropped by the scatter
-        idx = np.full((B, S), oob, np.int64)
-        for i, (slot, ln) in enumerate(zip(slots, lengths)):
-            idx[i, :ln] = slot * self.max_len + offset + np.arange(ln)
-        idx = jnp.asarray(idx.reshape(-1))
-        self.k = _scatter_tokens(self.k, k.reshape(L, B * S, *k.shape[3:]), idx)
-        self.v = _scatter_tokens(self.v, v.reshape(L, B * S, *v.shape[3:]), idx)
-        ends = jnp.asarray([offset + ln for ln in lengths], jnp.int32)
-        self.pos = self.pos.at[jnp.asarray(slots)].set(ends)
 
-    def gather_prefix(self, slots: list[int], n_prefix: int,
-                      n_rows_padded: int):
-        """Materialize [L, B, n_prefix, KV, hd] of already-written KV for a
-        chunk group (batch-pad rows replicate slot 0's data — computed on
-        but never read back)."""
-        idx = np.zeros((n_rows_padded,), np.int32)
-        idx[:len(slots)] = slots
-        idx = jnp.asarray(idx)
-        return self.k[:, idx, :n_prefix], self.v[:, idx, :n_prefix]
+    # ------------------------------------------------------------ lifecycle
+    def adopt(self, k, v) -> None:
+        """Take ownership of a step's output arenas (the jitted step
+        donated the previous ones, so this is an in-place handoff)."""
+        self.k = k
+        self.v = v
 
-    def update(self, caches: dict, active_mask) -> None:
-        """Adopt a decode step's outputs.  Only rows in ``active_mask``
-        (this step's decode batch, minus retirements) advance their
-        position; everyone else — free slots and rows mid-prefill — keeps
-        its previous position, so a prefill cursor survives sharing the
-        fused step with decoders.  (The batch-wide decode write did land a
-        garbage token at each inactive row's position, but the next chunk
-        scatter / next occupant's prefill overwrites it before any query
-        can attend there — see the module docstring.)"""
-        self.k = caches["k"]
-        self.v = caches["v"]
-        self.pos = jnp.where(active_mask, caches["pos"], self.pos)
+    def advance_prefill(self, rows: list[int], ends: list[int]) -> None:
+        self.pos = self.pos.at[jnp.asarray(rows)].set(
+            jnp.asarray(ends, jnp.int32))
+
+    def advance_decode(self, active_mask) -> None:
+        """Only rows in ``active_mask`` (this step's decode batch, minus
+        retirements) advance their position; everyone else — free slots
+        and rows mid-prefill — keeps its previous position, so a prefill
+        cursor survives sharing the fused step with decoders.  (The
+        batch-wide decode write did land a garbage token at each inactive
+        row's position, but the next chunk scatter / next occupant's
+        prefill overwrites it before any query can attend there — see the
+        module docstring.)"""
+        self.pos = jnp.where(jnp.asarray(active_mask), self.pos + 1,
+                             self.pos)

@@ -9,64 +9,81 @@ and finally advances every prefill-complete request by one token in a single
 fused decode step.  Long prompts no longer monopolize a step: a prompt
 larger than the budget is split into chunks that land across consecutive
 steps (per-request ``prefill_cursor``), each chunk attending to all KV the
-request has already written (``models/transformer.forward_with_prefix``:
-RoPE positions and the causal mask are offset by the cursor, so chunked
-prefill is numerically the prefill it replaces).  Decoding requests keep
-emitting a token every step while a long prompt trickles in beside them —
-that is the point: bounded decode-tail inter-token latency under mixed
-workloads, the regime where the paper's 8:16+outlier compressed weights are
-deployed.  New requests join the running batch without disturbing it —
-per-row attention/norms are independent and each lane carries its own cache
-position, so a request's tokens are identical whether it runs alone, packed
-next to strangers, or chunked under any budget (tested).
+request has already written.
+
+ONE attention path: every piece of model work — one-shot prefill, prefill
+chunk, fused decode — is ``models/transformer.unified_step`` over a pool
+view (``attend_over_pool``).  The step function scatters its fresh KV into
+the KV arena (slot rows or paged blocks) and attends IN PLACE against the
+arena with the per-request cursor as a length mask; RoPE positions and the
+causal/sliding-window mask are offset by the cursor, so chunked prefill is
+numerically the one-shot prefill it replaces.  Nothing ever gathers a copy
+of the already-written prefix, so each chunk's HBM traffic is independent
+of the cursor — prefilling a P-token prompt costs O(P) arena traffic
+total, not the O(P^2/budget) the old gather-per-chunk path paid.  Two
+jitted functions cover everything: ``_step_fn`` (chunk-or-prefill,
+retraces once per (batch, bucket) shape) and ``_decode_fn`` (fused decode,
+compiles once).  Decoding requests keep emitting a token every step while
+a long prompt trickles in beside them — bounded decode-tail inter-token
+latency under mixed workloads, the regime where the paper's 8:16+outlier
+compressed weights are deployed.  New requests join the running batch
+without disturbing it — per-row attention/norms are independent and each
+lane carries its own cursor, so a request's tokens are identical whether
+it runs alone, packed next to strangers, or chunked under any budget
+(tested).
 
 Two KV layouts behind one API (``kv_layout=``):
 
-  "slot"   SlotKVPool: contiguous [L, n_slots, max_len, KV, hd] buffers,
+  "slot"   SlotKVPool: contiguous [L, n_slots, max_len, KV, hd] arenas,
            one slot reserved per request for its lifetime.  Simplest and
            compile-once, but reserves max_len tokens of HBM per slot.
-           Prefill chunks scatter into the slot at the cursor offset.
+           The step functions address lanes through a ``SlotPoolView``
+           (lane->slot rows + cursors).
   "paged"  PagedKVPool (serving/paged/): KV lives in block_size-token
-           blocks allocated on demand from a shared arena, found through
-           per-request block tables and attended via a gather-based
-           paged decode step (models/transformer.decode_step_paged).
-           Block allocation is chunk-aware — a half-prefilled prompt
-           holds only the blocks its cursor has filled.  Identical
-           prefixes share blocks read-only (prefix cache); decode or
-           prefill pressure preempts the youngest request back to the
-           queue, whose fully-written blocks are first published to the
-           prefix cache so the resume restarts its cursor at the last
-           fully-written block instead of recomputing everything.
+           blocks allocated on demand from a shared arena, addressed
+           through per-request block tables (``PagedPoolView``) and
+           attended via the chunk-capable paged-attention kernel
+           (serving/paged/paged_attention.py — jnp reference off-TPU,
+           Pallas online-softmax over block tables on TPU, head-tiled
+           automatically for large H*hd).  Block allocation is
+           chunk-aware — a half-prefilled prompt holds only the blocks
+           its cursor has filled.  Identical prefixes share blocks
+           read-only (prefix cache); decode or prefill pressure preempts
+           the youngest request back to the queue, whose fully-written
+           blocks are first published to the prefix cache so the resume
+           restarts its cursor at the last fully-written block instead of
+           recomputing everything.
 
 Works unchanged for dense weights or ``SparseWeight`` compressed params
 (models/sparse_serving.py): the weights are just a pytree passed through the
-jitted prefill/decode functions, so the 8:16 (+structured outlier) serving
-path gets continuous batching and chunked prefill for free.
+jitted step functions, so the 8:16 (+structured outlier) serving path gets
+continuous batching and chunked prefill for free.
 
 Supported families: token-input transformers with [L, B, S, KV, hd] KV
 caches ("dense", "moe").  Recurrent/enc-dec families keep the one-shot path
 in launch/serve.py.
 
 Chunk batching: chunks at the same cursor are padded to power-of-two length
-buckets and grouped, so the number of distinct compiled prefill shapes stays
-small under mixed prompt lengths — and because chunk lengths are quantized
-(scheduler.CHUNK_QUANTUM) the cursor ladder is small too.  With causal
-attention the bucket padding (after each chunk) cannot influence real logits
-or KV — including MoE, whose local routing is capacity-free (models/moe.py
-_moe_local).  The engine's traced functions run under ``policy.suspended()``
-precisely to keep that path on every mesh: an active activation-sharding
-policy would flip MoE to the capacity-BOUNDED expert-parallel route, where
-pad tokens compete with real tokens for expert capacity.
+buckets and grouped, so the number of distinct compiled step shapes stays
+small under mixed prompt lengths.  With the in-place causal mask the bucket
+padding (after each chunk) cannot influence real logits or KV — pad lanes'
+writes are dropped (slot) or routed to the trash block (paged), and pad
+query outputs are never read — including MoE, whose local routing is
+capacity-free (models/moe.py _moe_local).  The engine's traced functions
+run under ``policy.suspended()`` precisely to keep that path on every mesh:
+an active activation-sharding policy would flip MoE to the
+capacity-BOUNDED expert-parallel route, where pad tokens compete with real
+tokens for expert capacity.
 
 Mesh-native serving (``mesh=``): pass a ``("data", "model")`` mesh and the
 engine becomes tensor-parallel end to end through one placement layer
 (serving/placement.py): params — dense and SparseWeight compressed buffers
 alike — are committed out-dim-sharded over "model", both KV layouts shard
-their arenas' KV-head dim, and every jitted step function carries the
-explicit in/out shardings of ``placement.step_fn_shardings`` (the chunked
-fn's prefix KV uses the arena spec, so gathers stay shard-local).  Block
-tables, the prefix cache, and all scheduling state stay host-side and
-layout-agnostic.  Token streams are identical to the single-device engine
+their arenas' KV-head dim, and both jitted step functions carry the
+explicit in/out shardings of ``placement.step_fn_shardings`` (donated
+arenas stay in place shard-for-shard).  Block tables, the prefix cache,
+and all scheduling state stay host-side and layout-agnostic.  Token
+streams are identical to the single-device engine
 (tests/test_mesh_serving.py, tests/test_chunked_prefill.py); with no mesh
 (default) nothing changes from the single-device behavior.
 """
@@ -80,8 +97,8 @@ import numpy as np
 
 from ..models import transformer as tfm
 from ..parallel import policy as pol
-from .cache_pool import CachePoolError, SlotKVPool
-from .paged import OutOfBlocks, PagedKVPool
+from .cache_pool import CachePoolError, SlotKVPool, SlotPoolView
+from .paged import OutOfBlocks, PagedKVPool, PagedPoolView
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .sampling import sample_tokens
@@ -134,7 +151,11 @@ class ServingEngine:
                                    placement=self.placement)
         self.queue = RequestQueue(max_queue, queue_timeout_s)
         # per-step prefill token budget (max_prefill_per_step is the
-        # deprecated request-count knob, aliased with a one-time warning)
+        # deprecated request-count knob, aliased with a one-time warning).
+        # resolve -> validate_token_budget raises a construction-time
+        # ValueError when the budget cannot cover the chunk quantum or the
+        # longest admissible prompt's first chunk — instead of a deep
+        # stall inside scheduler.plan_chunks
         self.token_budget = resolve_token_budget(token_budget,
                                                  max_prefill_per_step,
                                                  max_len)
@@ -168,36 +189,46 @@ class ServingEngine:
                     return fn(*args)
             return traced
 
-        sh = self.placement.step_fn_shardings(psh)
+        sh = self.placement.step_fn_shardings(psh, kv_layout)
 
         def jit(fn, role, donate=()):
             """jit with the placement's explicit in/out shardings for this
             role; a plain single-device jit when no mesh is set."""
             return jax.jit(suspend(fn), donate_argnums=donate, **sh[role])
 
-        self._prefill_fn = jit(
-            lambda p, t: tfm.forward(p, {"tokens": t}, cfg, collect_kv=True),
-            "prefill")
-        # mid-sequence chunk against gathered context KV: paged prefix-cache
-        # hits AND every chunked-prefill continuation on either layout;
-        # retraces once per (prefix_len, bucket) shape pair
-        self._chunk_fn = jit(
-            lambda p, t, pk, pv: tfm.forward_with_prefix(
-                p, {"tokens": t}, cfg, pk, pv),
-            "chunk")
-        # k/v are donated: the pool adopts the step's output buffers, so the
-        # multi-GB caches update in place instead of being copied every token
-        # (cache out shardings == in shardings, so donation stays in place
-        # shard-for-shard on the mesh)
-        self._decode_fn = jit(
-            lambda p, k, v, pos, t: tfm.decode_step(
-                p, {"k": k, "v": v, "pos": pos}, {"tokens": t}, cfg),
-            "decode", donate=(1, 2))
-        self._decode_paged_fn = jit(
-            lambda p, k, v, bt, pos, t: tfm.decode_step_paged(
-                p, {"k": k, "v": v, "block_tables": bt, "pos": pos},
-                {"tokens": t}, cfg, attn_backend=paged_attn_backend),
-            "decode_paged", donate=(1, 2))
+        # the TWO step functions of the unified attend-over-pool path:
+        # chunk-or-prefill (any S at any cursor; retraces once per
+        # (batch, bucket) shape — the cursor is data, not shape, so the
+        # ladder is small and per-step HBM cost is cursor-independent) and
+        # the fused decode (S=1 over every lane; compiles once).  k/v are
+        # donated: the pool adopts the step's output arenas, so the
+        # multi-GB caches update in place instead of being copied every
+        # token (out shardings == in shardings, so donation stays in place
+        # shard-for-shard on the mesh).
+        if kv_layout == "paged":
+            trash = self.pool.trash_block
+            self._step_fn = jit(
+                lambda p, k, v, bt, cur, nn, t: tfm.unified_step(
+                    p, PagedPoolView(k, v, bt, cur, nn, trash),
+                    {"tokens": t}, cfg, attn_backend=paged_attn_backend),
+                "step", donate=(1, 2))
+            self._decode_fn = jit(
+                lambda p, k, v, bt, pos, t: tfm.unified_step(
+                    p, PagedPoolView(k, v, bt, pos, jnp.ones_like(pos),
+                                     trash),
+                    {"tokens": t}, cfg, attn_backend=paged_attn_backend),
+                "decode", donate=(1, 2))
+        else:
+            self._step_fn = jit(
+                lambda p, k, v, rows, cur, nn, t: tfm.unified_step(
+                    p, SlotPoolView(k, v, rows, cur, nn), {"tokens": t},
+                    cfg),
+                "step", donate=(1, 2))
+            self._decode_fn = jit(
+                lambda p, k, v, pos, t: tfm.unified_step(
+                    p, SlotPoolView(k, v, None, pos, jnp.ones_like(pos)),
+                    {"tokens": t}, cfg),
+                "decode", donate=(1, 2))
 
     # ------------------------------------------------------------ admission
     def submit(self, prompt, sampling: SamplingParams | None = None,
@@ -405,31 +436,34 @@ class ServingEngine:
 
     def _run_chunk_group(self, group: list[tuple], cursor: int, bucket: int,
                          stats: dict) -> int:
-        """Run one batched prefill chunk for rows sharing (cursor, bucket):
-        compute tokens [cursor, cursor+take) against the already-written
-        context, scatter the fresh KV at the cursor, and emit a first
-        token for every row whose cursor reached its sequence end.
-        Returns the number of requests that finished immediately."""
+        """Run one batched step for rows sharing (cursor, bucket): write
+        tokens [cursor, cursor+take) straight into the arena and attend in
+        place against the already-written context (``unified_step`` — at
+        cursor 0 this IS the one-shot prefill), then emit a first token
+        for every row whose cursor reached its sequence end.  Returns the
+        number of requests that finished immediately."""
         n = len(group)
         B = _bucket(n, 1)                   # batch pad, power-of-two ladder
         rows = [req.slot for req, _ in group]
         seqs = [self._seq(req) for req, _ in group]
         takes = [take for _, take in group]
         tokens = np.zeros((B, bucket), np.int32)
+        cur = np.zeros((B,), np.int32)
+        n_new = np.zeros((B,), np.int32)
         for i, (seq, take) in enumerate(zip(seqs, takes)):
             tokens[i, :take] = seq[cursor:cursor + take]
-        if cursor > 0:
-            pk, pv = self.pool.gather_prefix(rows, cursor, B)
-            logits, (k, v) = self._chunk_fn(self.params, jnp.asarray(tokens),
-                                            pk, pv)
-        else:
-            logits, (k, v) = self._prefill_fn(self.params,
-                                              jnp.asarray(tokens))
+            cur[i] = cursor
+            n_new[i] = take
         if self.kv_layout == "paged":
-            self.pool.write_prefill(rows, k[:, :n], v[:, :n], cursor, takes)
+            lanes = self.pool.lane_tables(rows, B)
         else:
-            self.pool.write_prefill_group(rows, k[:, :n], v[:, :n], takes,
-                                          offset=cursor)
+            self.pool.chunk_end_check(cursor, takes)
+            lanes = self.pool.lane_rows(rows, B)
+        logits, (k, v) = self._step_fn(
+            self.params, self.pool.k, self.pool.v, jnp.asarray(lanes),
+            jnp.asarray(cur), jnp.asarray(n_new), jnp.asarray(tokens))
+        self.pool.adopt(k, v)
+        self.pool.advance_prefill(rows, [cursor + t for t in takes])
         stats["prefill_tokens"] += sum(takes)
         stats["prefill_chunks"] += n
 
@@ -483,10 +517,11 @@ class ServingEngine:
 
     def _decode_once(self, stats: dict | None = None) -> int:
         """Advance every prefill-complete request one token in a single
-        fused step.  Rows mid-prefill share the batch but are masked out
-        of position updates and sampling (their lanes compute a discarded
-        garbage token — see cache_pool/pool update docstrings for why the
-        stray write is harmless)."""
+        fused step (``unified_step`` at S=1 over every lane).  Rows
+        mid-prefill share the batch but are masked out of position
+        updates and sampling (their lanes compute a discarded garbage
+        token — see cache_pool/pool docstrings for why the stray write is
+        harmless)."""
         stats = stats if stats is not None else {"preempted": 0}
         active = self._decode_rows()
         if self.kv_layout == "paged":
@@ -507,20 +542,21 @@ class ServingEngine:
                 return 0
             stats["decoded"] = len(active)
             tokens = jnp.asarray(self._last_token[:, None])
-            logits, caches = self._decode_paged_fn(
+            logits, (k, v) = self._decode_fn(
                 self.params, self.pool.k, self.pool.v,
                 self.pool.block_tables, self.pool.pos, tokens)
         else:
             stats["decoded"] = len(active)
             tokens = jnp.asarray(self._last_token[:, None])
-            logits, caches = self._decode_fn(self.params, self.pool.k,
-                                             self.pool.v, self.pool.pos,
-                                             tokens)
-        self._slot_logits = logits.astype(jnp.float32)
+            logits, (k, v) = self._decode_fn(
+                self.params, self.pool.k, self.pool.v, self.pool.pos,
+                tokens)
+        self.pool.adopt(k, v)
+        self._slot_logits = logits[:, 0].astype(jnp.float32)
         n_finished = self._emit_tokens(active)
         advanced = np.zeros((self.pool.n_slots,), bool)
         advanced[[s for s in active if s in self.running]] = True
-        self.pool.update(caches, jnp.asarray(advanced))
+        self.pool.advance_decode(advanced)
         return n_finished
 
     def _emit_tokens(self, slots: list[int]) -> int:

@@ -1,26 +1,40 @@
-"""Paged decode attention: one query token per row over block-mapped KV.
+"""Paged attention over block-mapped KV: decode (q_len == 1) AND chunked
+prefill (q_len == S) through one entry point.
 
-Two implementations behind one entry point:
+``q`` is [B, S, H, hd]; ``cursor`` [B] counts the tokens of each row that
+were already visible before this step's S fresh ones.  Query i of row b
+sits at absolute position ``cursor[b] + i`` and attends to sequence
+positions ``j <= cursor[b] + i`` (window-limited) — the unified in-place
+masking rule of ``models/transformer.attend_over_pool``: the fresh chunk's
+KV is scattered into the arena *before* attention, so the causal mask
+alone hides this step's not-yet-visible writes, stale tokens of previous
+block occupants, and trash-block padding.  S=1 with ``cursor = pos``
+reproduces the old decode contract (visible count ``pos + 1``).
+
+Three implementations behind one entry point:
 
 - ``reference``: gather the row's blocks into a contiguous
   ``[B, nb*block_size, KV, hd]`` view with ``arena[block_tables]`` and run
-  the same masked softmax as ``models/layers.decode_attention``.  Because a
-  table maps sequence position ``p`` to gathered index ``p`` exactly, the
-  ``< cache_len`` mask carries over unchanged — XLA fuses the gather, so
-  this is also the portable CPU/GPU path.
+  the masked softmax.  A table maps sequence position ``p`` to gathered
+  index ``p`` exactly, so the mask carries over unchanged — XLA fuses the
+  gather, so this is also the portable CPU/GPU path.
 - ``pallas``: a TPU kernel (interpret-mode fallback off-TPU) that never
   materializes the gathered view.  The block table rides in as a
   scalar-prefetch operand, the grid is ``(B, nb)`` with blocks innermost,
   and each step DMAs exactly one physical KV block — the index map reads
   ``block_tables[b, j]`` — accumulating flash-style (running max / sum /
-  weighted value in VMEM scratch).  HBM traffic is therefore proportional
-  to the tokens a request has actually written, not to a reserved
-  ``max_len``, which is the whole point of paging the cache.
+  weighted value in VMEM scratch) over ALL S queries of the row at once.
+  HBM traffic is therefore proportional to the tokens a request has
+  actually written, not to a reserved ``max_len``.
+- ``pallas`` head-tiled: same kernel with an extra grid axis over KV-head
+  tiles, for models whose full [S, H, hd] q/accumulator tiles would
+  pressure VMEM (large H*hd).  Selected automatically when
+  ``H * hd >= _HEAD_TILE_THRESHOLD`` (env ``REPRO_PAGED_HEAD_TILE``
+  forces a tile width; 0 disables).
 
-Both paths mask with a finite ``-1e30`` (exp underflows to exactly 0.0
-against any real row max), so padding blocks — table entries past a short
-row point at the shared trash block — contribute exactly nothing and the
-result is bit-comparable with the contiguous slot-cache attention.
+All paths mask with a finite ``-1e30`` (exp underflows to exactly 0.0
+against any real row max), so masked positions contribute exactly nothing
+and the result is comparable with the contiguous slot-arena attention.
 """
 from __future__ import annotations
 
@@ -35,6 +49,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 _NEG_INF = -1e30
 
+# head-tiled kernel kicks in at this many q-head * head-dim lanes; chosen
+# so a [S, H, hd] f32 accumulator tile stays well under VMEM at serving
+# chunk sizes (S <= a few hundred)
+_HEAD_TILE_THRESHOLD = 4096
+
 
 def _default_backend() -> str:
     env = os.environ.get("REPRO_PAGED_BACKEND")
@@ -45,41 +64,60 @@ def _default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "reference"
 
 
+def _head_tile(H: int, KV: int, hd: int) -> int | None:
+    """KV heads per kernel tile, or None for the untiled kernel.  The
+    ``REPRO_PAGED_HEAD_TILE`` override falls back to untiled (None) when
+    the requested tile cannot legally tile this model's KV heads, so one
+    fleet-wide knob never crashes a smaller model's serving path."""
+    env = os.environ.get("REPRO_PAGED_HEAD_TILE")
+    if env is not None:
+        t = int(env)
+        if t <= 0 or t >= KV or KV % t:
+            return None
+        return t
+    if H * hd < _HEAD_TILE_THRESHOLD:
+        return None
+    n_rep = H // KV
+    per_tile = max(_HEAD_TILE_THRESHOLD // (2 * n_rep * hd), 1)
+    while KV % per_tile:
+        per_tile -= 1
+    return per_tile if per_tile < KV else None
+
+
 # --------------------------------------------------------------------------
 # reference (jnp gather)
 # --------------------------------------------------------------------------
 
-def paged_attention_ref(q, k_arena, v_arena, block_tables, cache_len,
+def paged_attention_ref(q, k_arena, v_arena, block_tables, cursor,
                         *, window: int | None = None) -> jax.Array:
-    """q [B,1,H,hd]; arenas [n_blocks, bs, KV, hd]; block_tables [B, nb]
-    int32; cache_len [B] (tokens visible per row).  Returns [B,1,H,hd]."""
-    B, _, H, hd = q.shape
+    """q [B,S,H,hd]; arenas [n_blocks, bs, KV, hd]; block_tables [B, nb]
+    int32; cursor [B] (tokens visible per row before this step's S fresh
+    ones).  Returns [B,S,H,hd].
+
+    A table maps sequence position ``p`` to gathered index ``p`` exactly,
+    so after the gather this IS the contiguous length-masked attention —
+    delegated to ``models/layers.attend_length_masked`` so the masking
+    rule lives in one place."""
+    from ...models.layers import attend_length_masked
+    B, S, H, hd = q.shape
     _, bs, KV, _ = k_arena.shape
     nb = block_tables.shape[1]
     k = k_arena[block_tables].reshape(B, nb * bs, KV, hd)
     v = v_arena[block_tables].reshape(B, nb * bs, KV, hd)
-    if KV != H:
-        k = jnp.repeat(k, H // KV, axis=2)
-        v = jnp.repeat(v, H // KV, axis=2)
-    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(B, H, hd)
-    scores = jnp.einsum("bhd,bshd->bhs", qf, k.astype(jnp.float32))
-    idx = jnp.arange(nb * bs)[None]
-    valid = idx < cache_len[:, None]
-    if window is not None:
-        valid &= idx >= jnp.maximum(cache_len[:, None] - window, 0)
-    scores = jnp.where(valid[:, None], scores, _NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
-    return out.reshape(B, 1, H, hd).astype(q.dtype)
+    return attend_length_masked(q, k, v, cursor, window=window)
 
 
 # --------------------------------------------------------------------------
 # pallas kernel
 # --------------------------------------------------------------------------
 
-def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref, *, bs, nb, n_rep, window):
-    b, j = pl.program_id(0), pl.program_id(1)
+def _paged_attn_kernel(bt_ref, cur_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, bs, nb, n_rep, window,
+                       head_tiled):
+    if head_tiled:
+        b, j = pl.program_id(0), pl.program_id(2)
+    else:
+        b, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
@@ -87,88 +125,112 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    hd = q_ref.shape[-1]
-    qf = q_ref[0].astype(jnp.float32) / math.sqrt(hd)         # [H, hd]
-    k = k_ref[0].astype(jnp.float32)                          # [bs, KV, hd]
+    S, hd = q_ref.shape[1], q_ref.shape[-1]
+    qf = q_ref[0].astype(jnp.float32) / math.sqrt(hd)         # [S, Ht, hd]
+    k = k_ref[0].astype(jnp.float32)                          # [bs, KVt, hd]
     v = v_ref[0].astype(jnp.float32)
     if n_rep > 1:
-        k = jnp.repeat(k, n_rep, axis=1)                      # [bs, H, hd]
+        k = jnp.repeat(k, n_rep, axis=1)                      # [bs, Ht, hd]
         v = jnp.repeat(v, n_rep, axis=1)
-    s = jnp.einsum("hd,shd->hs", qf, k)                       # [H, bs]
+    s = jnp.einsum("qhd,thd->hqt", qf, k)                     # [Ht, S, bs]
 
-    seq_len = len_ref[b]
+    qpos = cur_ref[b] + jax.lax.iota(jnp.int32, S)            # [S]
     idx = j * bs + jax.lax.iota(jnp.int32, bs)                # [bs]
-    valid = idx < seq_len
+    valid = idx[None, :] <= qpos[:, None]                     # [S, bs]
     if window is not None:
-        valid &= idx >= jnp.maximum(seq_len - window, 0)
-    s = jnp.where(valid[None, :], s, _NEG_INF)
+        valid &= idx[None, :] > qpos[:, None] - window
+    s = jnp.where(valid[None], s, _NEG_INF)
 
-    m_prev, l_prev = m_ref[...], l_ref[...]                   # [H,1]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_prev, l_prev = m_ref[...], l_ref[...]                   # [Ht, S]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                                    # [H, bs]
+    p = jnp.exp(s - m_new[..., None])                         # [Ht, S, bs]
     m_ref[...] = m_new
-    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("hs,shd->hd", p, v)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=2)
+    acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                    + jnp.einsum("hqt,thd->hqd", p, v))
 
     @pl.when(j == nb - 1)
     def _finish():
-        denom = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[...] = (acc_ref[...] / denom)[None].astype(o_ref.dtype)
+        denom = jnp.maximum(l_ref[...], 1e-30)                # [Ht, S]
+        out = acc_ref[...] / denom[..., None]                 # [Ht, S, hd]
+        o_ref[...] = out.transpose(1, 0, 2)[None].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "interpret"))
-def paged_attention_pallas(q, k_arena, v_arena, block_tables, cache_len,
+                   static_argnames=("window", "interpret", "head_tile"))
+def paged_attention_pallas(q, k_arena, v_arena, block_tables, cursor,
                            *, window: int | None = None,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool = True,
+                           head_tile: int | None = None) -> jax.Array:
     """Same contract as ``paged_attention_ref``; one grid step per
-    (row, block), KV blocks DMA'd by table lookup via scalar prefetch."""
-    B, _, H, hd = q.shape
+    (row[, head tile], block), KV blocks DMA'd by table lookup via scalar
+    prefetch.  ``head_tile`` = KV heads per grid tile (None: all heads in
+    one tile) — the large-H*hd variant walks head tiles as a middle grid
+    axis so q/accumulator tiles stay VMEM-sized."""
+    B, S, H, hd = q.shape
     n_blocks, bs, KV, _ = k_arena.shape
     nb = block_tables.shape[1]
     n_rep = H // KV
-    q3 = q.reshape(B, H, hd)
+
+    if head_tile is not None and (KV % head_tile or head_tile >= KV):
+        raise ValueError(f"head_tile {head_tile} must divide and be "
+                         f"smaller than KV={KV}")
+    kvt = head_tile if head_tile is not None else KV
+    ht = kvt * n_rep
+    kern = functools.partial(_paged_attn_kernel, bs=bs, nb=nb, n_rep=n_rep,
+                             window=window,
+                             head_tiled=head_tile is not None)
+    if head_tile is None:
+        grid = (B, nb)
+        q_spec = pl.BlockSpec((1, S, H, hd), lambda b, j, bt, cu: (b, 0, 0, 0))
+        kv_spec = pl.BlockSpec((1, bs, KV, hd),
+                               lambda b, j, bt, cu: (bt[b, j], 0, 0, 0))
+        o_spec = pl.BlockSpec((1, S, H, hd), lambda b, j, bt, cu: (b, 0, 0, 0))
+    else:
+        grid = (B, KV // kvt, nb)
+        q_spec = pl.BlockSpec((1, S, ht, hd),
+                              lambda b, h, j, bt, cu: (b, 0, h, 0))
+        kv_spec = pl.BlockSpec((1, bs, kvt, hd),
+                               lambda b, h, j, bt, cu: (bt[b, j], 0, h, 0))
+        o_spec = pl.BlockSpec((1, S, ht, hd),
+                              lambda b, h, j, bt, cu: (b, 0, h, 0))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                  # block tables, cache lens
-        grid=(B, nb),
-        in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, bs, KV, hd),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, bs, KV, hd),
-                         lambda b, j, bt, ln: (bt[b, j], 0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
+        num_scalar_prefetch=2,                  # block tables, cursors
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
         scratch_shapes=[
-            pltpu.VMEM((H, 1), jnp.float32),    # running max
-            pltpu.VMEM((H, 1), jnp.float32),    # running sum
-            pltpu.VMEM((H, hd), jnp.float32),   # weighted-value accumulator
+            pltpu.VMEM((ht, S), jnp.float32),     # running max
+            pltpu.VMEM((ht, S), jnp.float32),     # running sum
+            pltpu.VMEM((ht, S, hd), jnp.float32),  # weighted-value acc
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_paged_attn_kernel, bs=bs, nb=nb, n_rep=n_rep,
-                          window=window),
+        kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), cache_len.astype(jnp.int32),
-      q3, k_arena, v_arena)
-    return out.reshape(B, 1, H, hd)
+    )(block_tables.astype(jnp.int32), cursor.astype(jnp.int32),
+      q, k_arena, v_arena)
+    return out
 
 
 # --------------------------------------------------------------------------
 # dispatch
 # --------------------------------------------------------------------------
 
-def paged_attention(q, k_arena, v_arena, block_tables, cache_len, *,
+def paged_attention(q, k_arena, v_arena, block_tables, cursor, *,
                     window: int | None = None,
                     backend: str | None = None) -> jax.Array:
     backend = backend or _default_backend()
     if backend == "pallas":
+        H, hd = q.shape[2], q.shape[3]
+        KV = k_arena.shape[2]
         return paged_attention_pallas(
-            q, k_arena, v_arena, block_tables, cache_len, window=window,
-            interpret=jax.default_backend() != "tpu")
-    return paged_attention_ref(q, k_arena, v_arena, block_tables, cache_len,
+            q, k_arena, v_arena, block_tables, cursor, window=window,
+            interpret=jax.default_backend() != "tpu",
+            head_tile=_head_tile(H, KV, hd))
+    return paged_attention_ref(q, k_arena, v_arena, block_tables, cursor,
                                window=window)

@@ -3,18 +3,27 @@
 Satisfies the same cache-pool protocol as ``SlotKVPool``
 (``serving/cache_pool.py``): ``n_free`` concurrency units, a
 ``max_request_tokens`` admission bound, ``k``/``v``/``pos`` device state
-the jitted decode consumes, and ``release``/``update`` lifecycle hooks.
-The difference is what backs a request: a *row* here is only scheduling
-state (a decode-batch lane plus a block table); the KV bytes live in
-``block_size``-token blocks allocated on demand from one shared arena
-(``block_pool.py``), found via the per-row table (``block_table.py``),
-and shared across requests with identical prefixes (``prefix_cache.py``).
+the jitted steps consume, and the ``adopt``/``advance_*``/``release``
+lifecycle hooks.  The difference is what backs a request: a *row* here is
+only scheduling state (a decode-batch lane plus a block table); the KV
+bytes live in ``block_size``-token blocks allocated on demand from one
+shared arena (``block_pool.py``), found via the per-row table
+(``block_table.py``), and shared across requests with identical prefixes
+(``prefix_cache.py``).
 
-Admission therefore decouples concurrency from reservation: a row costs
-nothing until tokens are actually written, so ``n_rows`` can far exceed
-what per-row ``max_len`` reservation would allow in the same HBM.
-Allocation is chunk-aware: ``admit(alloc_tokens=...)`` maps only the
-first prefill chunk (plus any matched cached prefix) onto blocks, and
+All KV writes happen INSIDE the jitted step functions: the pool exposes a
+``PagedPoolView`` (arena + per-lane block tables + cursors) and
+``models/transformer.unified_step`` scatters each chunk/decode token
+through the table and attends in place over the blocks
+(``paged_attention.py``) — prefill chunks never gather their
+already-written prefix, so per-step HBM traffic is independent of the
+cursor.
+
+Admission decouples concurrency from reservation: a row costs nothing
+until tokens are actually written, so ``n_rows`` can far exceed what
+per-row ``max_len`` reservation would allow in the same HBM.  Allocation
+is chunk-aware: ``admit(alloc_tokens=...)`` maps only the first prefill
+chunk (plus any matched cached prefix) onto blocks, and
 ``ensure_capacity`` appends blocks as the engine's prefill cursor
 advances — so a half-prefilled long prompt holds only the blocks it has
 actually filled.  The flip side is that the arena can run dry mid-decode
@@ -22,14 +31,16 @@ or mid-prefill; ``prepare_decode``/``ensure_capacity`` raise
 ``OutOfBlocks`` and the engine preempts a running request back to the
 queue instead of failing.
 
-One block is reserved as the *trash block*: inactive decode-batch rows
-(and prefill padding) point their tables/slots at it so the fused decode
-step can write unconditionally for every lane without corrupting blocks
-that were recycled to another request.
+One block is reserved as the *trash block*: inactive decode-batch rows,
+prefill bucket padding, and any position past a lane's ``n_new`` route
+their writes there, so the fused steps can write unconditionally for
+every lane without corrupting blocks that were recycled to another
+request.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -41,14 +52,51 @@ from .block_table import BlockTable, blocks_needed
 from .prefix_cache import PrefixCache
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _scatter_tokens(arena, vals, slots):
-    """Write ``vals [L, T, KV, hd]`` at flat token ``slots [T]`` of the
-    arena (viewed as [L, n_blocks*bs, KV, hd]), in place (donated)."""
-    L, nb, bs = arena.shape[:3]
-    flat = arena.reshape(L, nb * bs, *arena.shape[3:])
-    flat = flat.at[:, slots].set(vals.astype(arena.dtype))
-    return flat.reshape(arena.shape)
+@dataclasses.dataclass(frozen=True)
+class PagedPoolView:
+    """What ``transformer.attend_over_pool`` sees of a paged pool: the
+    block arena plus per-lane block tables and cursors — NOT a gathered
+    copy of context.  Constructed inside the engine's traced step
+    functions; ``trash`` is the host-known trash-block id (static).
+
+    ``k``/``v`` are [L, n_blocks, block_size, KV, hd] at step level and
+    one layer's [n_blocks, block_size, KV, hd] slice inside the per-layer
+    scan.  ``block_tables`` [B, nb] maps each lane's sequence position p
+    to physical block ``bt[b, p // block_size]`` (padding lanes carry
+    all-trash tables).  ``cursor``/``n_new`` as in ``SlotPoolView``.
+    """
+    k: Any
+    v: Any
+    block_tables: Any
+    cursor: Any
+    n_new: Any
+    trash: int = 0
+
+    rows = None                           # duck-type marker: paged layout
+
+    def write_layer(self, k_l, v_l, fresh_k, fresh_v):
+        """Scatter fresh [B, S, KV, hd] KV through the block tables at
+        each lane's cursor, in place under donation.  Every padding
+        element — batch-pad lanes, positions past a lane's ``n_new``, or
+        positions past the table width — routes to the trash block, so
+        the compiled scatter depends only on (B, S)."""
+        bs = k_l.shape[1]
+        B, S = fresh_k.shape[:2]
+        nb = self.block_tables.shape[1]
+        p = self.cursor[:, None] + jnp.arange(S)[None]        # [B,S]
+        bi = p // bs
+        blk = jnp.take_along_axis(self.block_tables,
+                                  jnp.clip(bi, 0, nb - 1), axis=1)
+        slot = blk * bs + p % bs
+        valid = (jnp.arange(S)[None] < self.n_new[:, None]) & (bi < nb)
+        slot = jnp.where(valid, slot, self.trash * bs).reshape(-1)
+        def scat(arena, vals):
+            nblk = arena.shape[0]
+            flat = arena.reshape(nblk * bs, *arena.shape[2:])
+            flat = flat.at[slot].set(
+                vals.reshape(B * S, *vals.shape[2:]).astype(arena.dtype))
+            return flat.reshape(arena.shape)
+        return scat(k_l, fresh_k), scat(v_l, fresh_v)
 
 
 class PagedKVPool:
@@ -104,11 +152,24 @@ class PagedKVPool:
         return min(self.max_len, self.n_blocks * self.block_size)
 
     @property
+    def trash_block(self) -> int:
+        return self._trash
+
+    @property
     def block_tables(self):
         if self._bt_dirty:
             self._bt_jnp = jnp.asarray(self._bt_np)
             self._bt_dirty = False
         return self._bt_jnp
+
+    def lane_tables(self, rows: list[int], n_rows_padded: int) -> np.ndarray:
+        """Host per-lane block tables for a chunk group; padding lanes are
+        all-trash so their writes and gathers stay harmless."""
+        out = np.full((n_rows_padded, self.max_blocks_per_row),
+                      self._trash, np.int32)
+        for i, row in enumerate(rows):
+            out[i] = self._bt_np[row]
+        return out
 
     # -------------------------------------------------------- allocation
     @property
@@ -183,7 +244,7 @@ class PagedKVPool:
         # at least the final prompt token must be recomputed (its logits
         # seed the first generated token), and the cached count is kept on
         # a block boundary so suffix prefills see a handful of distinct
-        # (prefix_len, bucket) shapes instead of one per prompt length
+        # (bucket) shapes instead of one per prompt length
         n_cached = min(len(matched) * bs, (n - 1) // bs * bs) if matched \
             else 0
         target = n if alloc_tokens is None else min(n, max(alloc_tokens,
@@ -207,7 +268,7 @@ class PagedKVPool:
         self._bt_np[row, :] = self._trash
         self._bt_np[row, :len(table_blocks)] = table_blocks
         self._bt_dirty = True
-        self._pos_np[row] = 0            # set for real by write_prefill
+        self._pos_np[row] = 0            # set for real by advance_prefill
         return row, n_cached
 
     def ensure_capacity(self, row: int, n_tokens: int) -> None:
@@ -229,36 +290,6 @@ class PagedKVPool:
             self._bt_dirty = True
 
     # -------------------------------------------------------------- data
-    def write_prefill(self, rows: list[int], k, v, offset: int,
-                      lengths: list[int]) -> None:
-        """Scatter a prefill-chunk group's KV into the rows' blocks at
-        sequence ``offset`` (the group's shared cursor: cached-prefix
-        length on a cache hit, the running chunk cursor otherwise —
-        partial-block boundaries are fine, the mapping is per token).
-
-        ``k``/``v``: [L, B, S_bucket, KV, hd] with B >= len(rows) (batch
-        pad) and S_bucket >= each row's chunk length (bucket pad).  Real
-        (row, position) pairs map to their table slots; every pad element
-        maps to the trash block, so the scatter shape is fixed per
-        (bucket, batch) and compiles once."""
-        L, B, S = k.shape[:3]
-        bs = self.block_size
-        if max(lengths) > S:
-            raise CapacityError(f"chunk of {max(lengths)} tokens exceeds "
-                                f"prefill bucket {S}")
-        trash_slot = self._trash * bs
-        slots = np.full((B, S), trash_slot, np.int64)
-        for i, (row, ln) in enumerate(zip(rows, lengths)):
-            t = self.tables[row]
-            for s in range(ln):
-                slots[i, s] = t.slot(offset + s)
-            self._pos_np[row] = offset + ln
-        slots = jnp.asarray(slots.reshape(-1))
-        self.blocks.k = _scatter_tokens(
-            self.blocks.k, k.reshape(L, B * S, *k.shape[3:]), slots)
-        self.blocks.v = _scatter_tokens(
-            self.blocks.v, v.reshape(L, B * S, *v.shape[3:]), slots)
-
     def register_prefix(self, row: int, tokens) -> None:
         """Publish the row's full blocks covering ``tokens`` into the
         prefix cache.  ``tokens`` may be any fully-WRITTEN prefix of the
@@ -267,27 +298,6 @@ class PagedKVPool:
         then matches these blocks instead of recomputing them)."""
         if self.prefix_cache is not None:
             self.prefix_cache.insert(tokens, self.tables[row].blocks)
-
-    def gather_prefix(self, rows: list[int], n_cached: int,
-                      n_rows_padded: int):
-        """Materialize [L, B, n_cached, KV, hd] of already-written KV for
-        a chunk group: the cached-prefix context on a cache hit, or all
-        previous chunks' KV when a prefill resumes mid-prompt (a partial
-        final block gathers whole and is sliced to the cursor).  Batch-pad
-        rows replicate the trash block."""
-        bs = self.block_size
-        nb = blocks_needed(n_cached, bs)
-        ids = np.full((n_rows_padded, nb), self._trash, np.int32)
-        for i, row in enumerate(rows):
-            ids[i] = self.tables[row].blocks[:nb]
-        idsj = jnp.asarray(ids)
-        L = self.blocks.k.shape[0]
-
-        def gather(arena):
-            g = arena[:, idsj]                    # [L, B, nb, bs, KV, hd]
-            g = g.reshape(L, n_rows_padded, nb * bs, *g.shape[4:])
-            return g[:, :, :n_cached]
-        return gather(self.blocks.k), gather(self.blocks.v)
 
     def prepare_decode(self, rows: list[int]) -> None:
         """Ensure every active row can write its next position: allocate a
@@ -309,22 +319,28 @@ class PagedKVPool:
                 self._bt_np[row, bi] = fresh
                 self._bt_dirty = True
 
-    def update(self, caches: dict, active_mask) -> None:
-        """Adopt a decode step's donated arenas; positions advance on the
-        host mirror for this step's decode rows only.  Rows mid-prefill
-        keep their cursor, free rows keep a stale (harmless) value — the
-        batch-wide decode write for every non-decoding row lands either
-        in the trash block (free rows: their table IS the trash block;
-        mid-prefill rows at an unallocated block boundary) or at a
-        position the next chunk scatter overwrites before any query can
-        attend to it."""
-        self.blocks.k = caches["k"]
-        self.blocks.v = caches["v"]
+    # --------------------------------------------------------- lifecycle
+    def adopt(self, k, v) -> None:
+        """Take ownership of a step's output arenas (donated in place)."""
+        self.blocks.k = k
+        self.blocks.v = v
+
+    def advance_prefill(self, rows: list[int], ends: list[int]) -> None:
+        for row, end in zip(rows, ends):
+            self._pos_np[row] = end
+
+    def advance_decode(self, active_mask) -> None:
+        """Positions advance on the host mirror for this step's decode
+        rows only.  Rows mid-prefill keep their cursor, free rows keep a
+        stale (harmless) value — the batch-wide decode write for every
+        non-decoding row lands either in the trash block (free rows:
+        their table IS the trash block; mid-prefill rows at an
+        unallocated block boundary) or at a position the next chunk
+        scatter overwrites before any query can attend to it."""
         active = np.asarray(active_mask)
         self._pos_np = np.where(active, self._pos_np + 1,
                                 self._pos_np).astype(np.int32)
 
-    # --------------------------------------------------------- lifecycle
     def release(self, row: int) -> None:
         t = self.tables[row]
         if t is None:

@@ -149,41 +149,40 @@ class ServingPlacement:
         return jax.tree_util.tree_map_with_path(
             one, params, is_leaf=lambda x: isinstance(x, SparseWeight))
 
-    def step_fn_shardings(self, param_shardings) -> dict:
-        """Explicit in/out shardings for every jitted step function of the
-        token-budgeted engine pipeline, keyed by function role:
+    def step_fn_shardings(self, param_shardings,
+                          kv_layout: str = "slot") -> dict:
+        """Explicit in/out shardings for the TWO jitted step functions of
+        the unified attend-over-pool engine, keyed by role:
 
-          "prefill"       (params, tokens) -> (logits, (k, v))
-          "chunk"         (params, tokens, prefix_k, prefix_v)
-                          -> (logits, (k, v)) — the chunked-prefill fn;
-                          prefix KV in AND fresh KV out carry the arena
-                          spec, so prefix gathers and chunk writes stay
-                          shard-local on the KV-head dim and the 1x8 mesh
-                          path remains token-identical to single-device
-          "decode"        slot-layout fused decode (donated arenas stay
-                          in place shard-for-shard)
-          "decode_paged"  paged fused decode (block tables replicated —
-                          host-side scheduling state)
+          "step"    chunk-or-prefill:
+                    (params, k, v, lanes, cursor, n_new, tokens)
+                    -> (logits, (k, v)).  ``lanes`` is the lane->slot row
+                    map (slot layout) or the per-lane block tables (paged)
+                    — host-shipped scheduling vectors, replicated.  The
+                    arenas ride in donated and come back on the same
+                    KV-head-sharded spec, so in-place writes AND the
+                    in-place attention reads stay shard-local and the
+                    1x8 mesh path remains token-identical to
+                    single-device.
+          "decode"  fused decode over every lane:
+                    slot  (params, k, v, pos, tokens)
+                    paged (params, k, v, block_tables, pos, tokens)
+                    -> (logits, (k, v)) — donated arenas stay in place
+                    shard-for-shard.
 
         With no mesh every entry is empty: the engine then builds plain
         single-device jits.
         """
         if not self.active:
-            return {k: {} for k in ("prefill", "chunk", "decode",
-                                    "decode_paged")}
+            return {k: {} for k in ("step", "decode")}
         psh, rep, kv = param_shardings, self.replicated, self.kv
+        out = (rep, (kv, kv))
+        decode_in = (psh, kv, kv, rep, rep, rep) if kv_layout == "paged" \
+            else (psh, kv, kv, rep, rep)
         return {
-            "prefill": dict(in_shardings=(psh, rep),
-                            out_shardings=(rep, (kv, kv))),
-            "chunk": dict(in_shardings=(psh, rep, kv, kv),
-                          out_shardings=(rep, (kv, kv))),
-            "decode": dict(in_shardings=(psh, kv, kv, rep, rep),
-                           out_shardings=(rep, {"k": kv, "v": kv,
-                                                "pos": rep})),
-            "decode_paged": dict(in_shardings=(psh, kv, kv, rep, rep, rep),
-                                 out_shardings=(rep, {"k": kv, "v": kv,
-                                                      "block_tables": rep,
-                                                      "pos": rep})),
+            "step": dict(in_shardings=(psh, kv, kv, rep, rep, rep, rep),
+                         out_shardings=out),
+            "decode": dict(in_shardings=decode_in, out_shardings=out),
         }
 
     # ------------------------------------------------------------ placement

@@ -83,10 +83,32 @@ def resolve_token_budget(token_budget: int | None,
             token_budget = max(int(max_prefill_per_step), 1) * max_len
     if token_budget is None:
         token_budget = 2 * max_len
-    token_budget = int(token_budget)
-    if token_budget < CHUNK_QUANTUM:
-        raise ValueError(f"token_budget must be >= {CHUNK_QUANTUM} "
-                         f"(the chunk quantum), got {token_budget}")
+    return validate_token_budget(int(token_budget), max_len=max_len)
+
+
+def validate_token_budget(token_budget: int, *, max_len: int,
+                          quantum: int = CHUNK_QUANTUM) -> int:
+    """Construction-time validation of the engine's per-step budget — a
+    clear ``ValueError`` at ``ServingEngine(...)`` instead of a deep stall
+    or failure inside ``plan_chunks``.
+
+    The budget must cover (a) the chunk quantum, or no mid-sequence chunk
+    can ever be scheduled and the queue head stalls forever, and (b) the
+    FIRST chunk of the longest admissible prompt — for ``max_len`` below
+    the quantum that first chunk is the whole prompt (final chunks are
+    exempt from quantization), so the effective floor is
+    ``min(quantum, max_len)``; any budget that also satisfies (a) covers
+    it.  Returns the validated budget for chaining.
+    """
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    floor = min(quantum, max_len)
+    if token_budget < floor:
+        raise ValueError(
+            f"token_budget={token_budget} cannot schedule any prefill "
+            f"chunk: it must cover the chunk quantum ({quantum}) and the "
+            f"longest admissible prompt's first chunk "
+            f"(min(quantum, max_len={max_len}) = {floor})")
     return token_budget
 
 

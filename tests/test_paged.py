@@ -161,37 +161,92 @@ def test_pool_admit_shares_and_releases():
 # paged attention numerics
 # --------------------------------------------------------------------------
 
-def _attn_case(seed=0, B=3, H=4, KV=2, hd=16, bs=8, n_blocks=10, nb=4):
+def _attn_case(seed=0, B=3, S=1, H=4, KV=2, hd=16, bs=8, n_blocks=10, nb=4):
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
     ka = jax.random.normal(ks[1], (n_blocks, bs, KV, hd), jnp.float32)
     va = jax.random.normal(ks[2], (n_blocks, bs, KV, hd), jnp.float32)
     bt = jnp.asarray(np.array([[3, 1, 7, 0], [2, 4, 5, 9], [8, 6, 0, 0]],
                               np.int32))
-    lens = jnp.asarray([27, 12, 9], jnp.int32)
-    return q, ka, va, bt, lens
+    # cursor = tokens visible before this step's S fresh ones; keep every
+    # row's last visible position inside its real blocks
+    cursor = jnp.asarray([27 - S, 12 - S, 9 - S], jnp.int32)
+    return q, ka, va, bt, cursor
 
 
 def test_paged_attention_ref_matches_contiguous():
-    q, ka, va, bt, lens = _attn_case()
-    ref = paged_attention_ref(q, ka, va, bt, lens)
-    # contiguous view assembled by the same table
+    q, ka, va, bt, cursor = _attn_case()
+    ref = paged_attention_ref(q, ka, va, bt, cursor)
+    # contiguous view assembled by the same table; decode masks < len
     B, nb = bt.shape
     bs = ka.shape[1]
     kc = ka[bt].reshape(B, nb * bs, *ka.shape[2:])
     vc = va[bt].reshape(B, nb * bs, *va.shape[2:])
-    ctg = decode_attention(q, kc, vc, lens)
+    ctg = decode_attention(q, kc, vc, cursor + 1)
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(ctg))
 
 
+def test_paged_attention_ref_chunk_matches_masked_contiguous():
+    """S>1 queries (a prefill chunk): query i of row b sees gathered
+    positions <= cursor[b] + i — identical to length-masked attention
+    over the contiguous view assembled by the same tables."""
+    from repro.models.layers import attend_length_masked
+    q, ka, va, bt, cursor = _attn_case(S=5)
+    ref = paged_attention_ref(q, ka, va, bt, cursor)
+    B, nb = bt.shape
+    bs = ka.shape[1]
+    kc = ka[bt].reshape(B, nb * bs, *ka.shape[2:])
+    vc = va[bt].reshape(B, nb * bs, *va.shape[2:])
+    ctg = attend_length_masked(q, kc, vc, cursor)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ctg))
+
+
+@pytest.mark.parametrize("S", [1, 5])
 @pytest.mark.parametrize("window", [None, 10])
-def test_paged_attention_pallas_matches_ref(window):
-    q, ka, va, bt, lens = _attn_case()
-    ref = paged_attention_ref(q, ka, va, bt, lens, window=window)
-    pal = paged_attention_pallas(q, ka, va, bt, lens, window=window,
+def test_paged_attention_pallas_matches_ref(window, S):
+    q, ka, va, bt, cursor = _attn_case(S=S)
+    ref = paged_attention_ref(q, ka, va, bt, cursor, window=window)
+    pal = paged_attention_pallas(q, ka, va, bt, cursor, window=window,
                                  interpret=True)
     np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
                                atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("S", [1, 4])
+def test_paged_attention_pallas_head_tiled_matches_ref(S):
+    """The large-H*hd variant (grid over KV-head tiles) is numerically
+    the untiled kernel; forced here via head_tile regardless of the
+    auto-select threshold."""
+    q, ka, va, bt, cursor = _attn_case(S=S, H=8, KV=4)
+    ref = paged_attention_ref(q, ka, va, bt, cursor)
+    for tile in (1, 2):
+        pal = paged_attention_pallas(q, ka, va, bt, cursor, interpret=True,
+                                     head_tile=tile)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+    with pytest.raises(ValueError, match="head_tile"):
+        paged_attention_pallas(q, ka, va, bt, cursor, interpret=True,
+                               head_tile=3)
+
+
+def test_head_tile_autoselect_threshold(monkeypatch):
+    """Dispatch picks the head-tiled kernel above the H*hd threshold and
+    honors the REPRO_PAGED_HEAD_TILE override."""
+    import importlib
+    pa = importlib.import_module("repro.serving.paged.paged_attention")
+    monkeypatch.delenv("REPRO_PAGED_HEAD_TILE", raising=False)
+    assert pa._head_tile(4, 2, 16) is None              # tiny: untiled
+    big = pa._head_tile(64, 8, 128)                     # 8192 lanes: tiled
+    assert big is not None and 8 % big == 0 and big < 8
+    monkeypatch.setenv("REPRO_PAGED_HEAD_TILE", "0")
+    assert pa._head_tile(64, 8, 128) is None            # forced off
+    monkeypatch.setenv("REPRO_PAGED_HEAD_TILE", "2")
+    assert pa._head_tile(8, 4, 16) == 2                 # forced on
+    # an override that cannot tile this model's KV heads falls back to
+    # the untiled kernel instead of crashing the serving path
+    assert pa._head_tile(4, 2, 16) is None              # t >= KV
+    monkeypatch.setenv("REPRO_PAGED_HEAD_TILE", "3")
+    assert pa._head_tile(8, 4, 16) is None              # KV % t != 0
 
 
 # --------------------------------------------------------------------------
