@@ -1,7 +1,7 @@
 """Serving benchmark: continuous batching under Poisson arrivals,
 dense vs 8:16(+16:256 outlier) compressed weights, slot vs paged KV.
 
-Three scenarios:
+Four scenarios:
 
 1. Poisson open-loop workload (exponential interarrival gaps) replayed
    through the ServingEngine for each (weights, kv_layout) combination;
@@ -20,6 +20,10 @@ Three scenarios:
    chunks beside the decode batch.  Reports the pooled inter-token
    latency p99 (the decode-tail stall) and prefill chunk counts for both
    modes.
+4. Mixed-family co-hosting: an xLSTM (ssm) engine and a dense engine
+   share one host and wall clock, each replaying its own Poisson trace;
+   the summary's ``families`` breakdown reports per-family tok/s and
+   ttft/itl percentiles over the shared window.
 
 Every run also lands in a machine-readable ``BENCH_serving.json``
 (--out) so the perf trajectory is tracked across PRs.  Summaries record
@@ -190,6 +194,75 @@ def long_prompt_scenario(cfg, params, args) -> dict:
     return out
 
 
+def mixed_family_scenario(args) -> dict:
+    """Co-hosted mixed-family serving: an xLSTM (ssm) engine and a dense
+    transformer engine share one host and one wall clock, each replaying
+    its own Poisson trace — O(1)-state recurrent serving and KV-pool
+    serving contending for the same cores.  The pooled summary's
+    ``families`` breakdown (runtime/metrics.py) reports each family's
+    tok/s and latency tails over the SHARED window, which is the number
+    that matters when deciding whether families can be co-scheduled or
+    need separate hosts."""
+    pairs = []
+    for arch in ("xlstm-350m", args.arch):
+        cfg = configs.get_smoke(arch)
+        if args.smoke:
+            cfg = dataclasses.replace(cfg, n_layers=2, remat=False)
+        zoo = get_model(cfg)
+        params = zoo.init(jax.random.PRNGKey(args.seed))
+        trace = poisson_trace(
+            n_requests=max(args.requests // 2, 2), rate_per_s=args.rate,
+            vocab=cfg.vocab, prompt_len=(args.prompt_min, args.prompt_max),
+            max_new_tokens=args.gen, seed=args.seed + len(pairs))
+        engine = _build_engine(cfg, params, args, "slot")
+        pairs.append((cfg.family, engine, trace))
+
+    for _, engine, trace in pairs:              # warm: compile every shape
+        for t in trace:
+            engine.submit(t.prompt, t.sampling())
+        engine.run()
+        engine.finished.clear()
+        engine.reset_stats()
+
+    pending = sorted(((t.arrival_s, j, t, engine)
+                      for _, engine, trace in pairs
+                      for j, t in enumerate(trace)),
+                     key=lambda e: e[0])
+    t0 = time.monotonic()
+    rejected, i = 0, 0
+    while i < len(pending) or any(e.has_work for _, e, _ in pairs):
+        now = time.monotonic() - t0
+        while (i < len(pending)
+               and pending[i][0] * args.time_scale <= now):
+            _, _, tr, engine = pending[i]
+            i += 1
+            try:
+                engine.submit(tr.prompt, tr.sampling())
+            except QueueFull:
+                rejected += 1
+        stepped = False
+        for _, engine, _ in pairs:
+            if engine.has_work:
+                engine.step()
+                stepped = True
+        if not stepped and i < len(pending):
+            next_due = pending[i][0] * args.time_scale
+            time.sleep(min(max(next_due - (time.monotonic() - t0), 0.0),
+                           0.05))
+    wall_s = time.monotonic() - t0
+
+    metrics = [r.metrics for _, engine, _ in pairs for r in engine.finished]
+    summary = summarize(metrics, wall_s)
+    summary["rejected"] = rejected
+    print(format_summary("mixed", summary))
+    for fam, sub in summary.get("families", {}).items():
+        print(f"{'':>10}{fam}: {sub['n_requests']} req, "
+              f"{sub['tok_per_s']:.1f} tok/s, "
+              f"ttft p50 {sub['ttft']['p50']*1e3:.0f}ms, "
+              f"itl p99 {sub['itl']['p99']*1e3:.1f}ms")
+    return summary
+
+
 def prefill_curve_scenario(cfg, params, args) -> dict:
     """SLOW scenario (opt-in via --prefill-curve): very-long-prompt
     prefill time vs prompt length, chunked through the RETIRED
@@ -352,6 +425,9 @@ def main(argv=None):
     # long-prompt chunked-prefill scenario
     ap.add_argument("--no-long-prompt", action="store_true",
                     help="skip the long-prompt chunked-prefill scenario")
+    # mixed-family co-hosting scenario
+    ap.add_argument("--no-mixed-family", action="store_true",
+                    help="skip the mixed-family (xlstm + dense) scenario")
     ap.add_argument("--long-requests", type=int, default=2)
     ap.add_argument("--long-short-requests", type=int, default=6)
     ap.add_argument("--long-len", type=int, default=256,
@@ -430,6 +506,10 @@ def main(argv=None):
     if not args.no_long_prompt:
         long_prompt = long_prompt_scenario(cfg, params, args)
 
+    mixed_family = None
+    if not args.no_mixed_family:
+        mixed_family = mixed_family_scenario(args)
+
     prefill_curve = None
     if args.prefill_curve:
         prefill_curve = prefill_curve_scenario(cfg, params, args)
@@ -451,6 +531,7 @@ def main(argv=None):
             "poisson": results,
             "shared_prefix": shared,
             "long_prompt": long_prompt,
+            "mixed_family": mixed_family,
             "prefill_curve": prefill_curve,
         }
         with open(args.out, "w") as f:

@@ -6,11 +6,15 @@ by their 8:16 (+N:256 outlier) compressed form at load time
 weights, on CPU the reference decompress path runs (same numerics).
 
 Modes:
-  default      continuous-batching engine (serving/): preallocated KV pool,
-               interleaved prefill/decode, per-request sampling.  Token-
-               identical to the legacy loop under greedy decoding.
-  --legacy     one-shot lock-step prefill+decode loop; works for every model
-               family (ssm / hybrid / encdec / vlm included).
+  default      continuous-batching engine (serving/) for every zoo family —
+               dense/moe/ssm/hybrid/encdec ride their family adapters
+               (serving/families.py); vlm keeps the one-shot loop.  The
+               enc-dec family feeds each request's encoder features at
+               submit time (here: random frontend embeddings).
+  --legacy     DEPRECATED parity-check adapter: runs the one-shot lock-step
+               loop, then (greedy, engine-supported family) replays the
+               same prompts through the engine and verifies the token
+               streams are identical.  Still the only path for vlm.
   --trace F    replay a JSON request trace (serving/trace.py) through the
                engine and report tok/s + latency percentiles.
 
@@ -116,25 +120,33 @@ def _engine_kwargs(args) -> dict:
                 prefix_caching=not args.no_prefix_cache, mesh=mesh)
 
 
-def run_engine(cfg, params, key, args):
+def run_engine(cfg, params, key, args, quiet: bool = False):
     """Continuous-batching engine on a batch of random prompts."""
     from ..serving import SamplingParams, ServingEngine
     engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen,
                            **_engine_kwargs(args))
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    # enc-dec requests carry their encoder features (same draw as the
+    # one-shot loop, so --legacy parity compares like against like)
+    embeds = jax.random.normal(key, (args.batch, args.prompt_len,
+                                     cfg.d_model), jnp.float32) \
+        if cfg.family == "encdec" else None
     sp = SamplingParams(max_new_tokens=args.gen,
                         temperature=args.temperature, top_k=args.top_k)
     t0 = time.time()
-    reqs = [engine.submit(prompt[i], sp) for i in range(args.batch)]
+    reqs = [engine.submit(prompt[i], sp,
+                          embeds=None if embeds is None else embeds[i])
+            for i in range(args.batch)]
     engine.run()
     wall = time.time() - t0
     n_tok = sum(len(r.tokens) for r in reqs)
-    print(f"engine[{args.kv_layout}]: {args.batch} requests, {n_tok} tokens "
-          f"in {wall:.2f}s ({n_tok/max(wall,1e-9):.1f} tok/s, "
-          f"{engine.n_steps} steps, {args.slots} slots)")
-    if args.kv_layout == "paged":
-        print(f"  paged: {engine.stats()['pool']}")
+    if not quiet:
+        print(f"engine[{args.kv_layout}]: {args.batch} requests, {n_tok} "
+              f"tokens in {wall:.2f}s ({n_tok/max(wall,1e-9):.1f} tok/s, "
+              f"{engine.n_steps} steps, {args.slots} slots)")
+        if args.kv_layout == "paged":
+            print(f"  paged: {engine.stats()['pool']}")
     return jnp.asarray([r.tokens for r in reqs], jnp.int32)
 
 
@@ -210,6 +222,9 @@ def main(argv=None):
         ap.error(f"--trace replays through the engine, which serves "
                  f"{SUPPORTED_FAMILIES} families; {args.arch!r} is "
                  f"{cfg.family!r}")
+    if args.trace is not None and cfg.family == "encdec":
+        ap.error("--trace carries token prompts only; the enc-dec family "
+                 "needs per-request encoder features")
 
     zoo, params, key = build_params(cfg, args)
 
@@ -217,10 +232,35 @@ def main(argv=None):
         return run_trace(cfg, params, args)
 
     if args.legacy or cfg.family not in SUPPORTED_FAMILIES:
-        if not args.legacy:
-            print(f"family {cfg.family!r} not engine-served yet; "
-                  f"using one-shot loop")
+        if args.legacy:
+            print("--legacy is DEPRECATED: the engine serves every zoo "
+                  "family except vlm; running the one-shot loop as a "
+                  "parity check")
+        else:
+            print(f"family {cfg.family!r} is not engine-served; "
+                  f"using the one-shot loop")
         gen = run_oneshot(cfg, zoo, params, key, args)
+        if (args.legacy and cfg.family in SUPPORTED_FAMILIES
+                and args.temperature == 0):
+            import numpy as np
+            eng = run_engine(cfg, params, key, args, quiet=True)
+            if np.array_equal(np.asarray(gen), np.asarray(eng)):
+                print("legacy parity: engine token streams identical")
+            elif cfg.dtype == jnp.float32:
+                raise SystemExit("legacy parity FAILED: engine and one-shot "
+                                 "token streams differ")
+            else:
+                # sub-f32 dtypes: XLA rounds fused low-precision chains at
+                # shape-dependent fusion boundaries, so the jitted engine
+                # step and the eager one-shot loop can disagree by one ulp
+                # — enough to flip greedy argmax on a near-tie.  Bit-exact
+                # parity is asserted at f32 (tests/test_family_engines.py).
+                n_bad = int((np.asarray(gen) != np.asarray(eng))
+                            .any(axis=1).sum())
+                print(f"legacy parity: {n_bad}/{args.batch} streams diverge "
+                      f"(greedy near-ties under {np.dtype(cfg.dtype).name} "
+                      f"fusion rounding; rerun an f32 config for the "
+                      f"bit-exact check)")
     else:
         gen = run_engine(cfg, params, key, args)
     print("sample:", gen[0, :12].tolist())

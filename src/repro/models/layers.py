@@ -189,6 +189,29 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
     return attend_length_masked(q, k_cache, v_cache, cache_len - 1)
 
 
+def attend_kv_length(q, k_cache, v_cache, kv_len) -> jax.Array:
+    """Non-causal attention over a length-masked KV buffer: cross-attention
+    for serving.  ``q`` [B,S,H,hd] attends to ``k_cache``/``v_cache``
+    [B,T,KV,hd] positions ``j < kv_len[b]`` — every query of a row sees the
+    same keys regardless of its own position (encoder context is fully
+    visible), with per-row true lengths masking arena padding at -1e30.
+    Identical einsum/softmax structure to ``attend_length_masked`` so a
+    decode step through either is bitwise-comparable across batch shapes."""
+    from ..parallel import policy as pol
+    B, S, H, hd = q.shape
+    k = _repeat_kv(k_cache, H)
+    v = _repeat_kv(v_cache, H)
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf, k.astype(jnp.float32))
+    scores = pol.shard(scores, ("fsdp", "model", None, None))
+    kpos = jnp.arange(k_cache.shape[1])                       # [T]
+    valid = kpos[None, :] < kv_len[:, None]                   # [B,T]
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # Parameter init helpers
 # --------------------------------------------------------------------------

@@ -106,6 +106,25 @@ def chunked_gla(q, k, v, log_f, log_i=None, *, chunk: int = 64,
     return y, (Cf, nf if normalizer else None)
 
 
+def masked_gates(log_f, log_i, valid):
+    """Neutralize gates at padded positions so ``chunked_gla`` over a padded
+    sequence leaves the state BIT-IDENTICAL to running the real tokens only.
+
+    At positions where ``valid`` [B,S] is False: log_f becomes exactly 0.0
+    (cumsum adds zeros, decay factor exp(0)=1 — no decay) and log_i becomes
+    -1e30 (exp underflows to exactly 0.0 — the k v^T outer product is
+    multiplied by a true float zero, not a tiny residue).  ``log_i=None``
+    (Mamba's fused i=dt convention folds the input gate into v) maps padded
+    positions to an explicit -1e30 gate, so callers must pass the returned
+    log_i onward even when they supplied None.
+    """
+    vm = valid[..., None]                         # [B,S,1] over heads
+    log_f = jnp.where(vm, log_f, 0.0)
+    base = log_i if log_i is not None else jnp.zeros_like(log_f)
+    log_i = jnp.where(vm, base, -1e30)
+    return log_f, log_i
+
+
 def gla_decode_step(q, k, v, log_f, log_i, state, normalizer: bool = False):
     """Single-token recurrence. q,k: [B,H,dk]; v: [B,H,dv]; gates [B,H]."""
     C, n = state

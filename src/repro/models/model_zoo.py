@@ -50,7 +50,7 @@ def get_model(cfg) -> ModelZoo:
             init=lambda key: xls.init_params(key, cfg),
             loss=lambda p, b, unroll=False: xls.loss_fn(p, b, cfg, unroll),
             prefill=lambda p, b, unroll=False: xls.prefill(p, b, cfg, unroll),
-            decode=lambda p, c, b, unroll=False: xls.decode_step(p, c, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: xls.decode_lockstep(p, c, b, cfg, unroll),
             init_cache=lambda bs, ml: {"states": xls.init_state(cfg, bs),
                                        "pos": jnp.zeros((), jnp.int32)},
         )
@@ -60,7 +60,7 @@ def get_model(cfg) -> ModelZoo:
             init=lambda key: zam.init_params(key, cfg),
             loss=lambda p, b, unroll=False: zam.loss_fn(p, b, cfg, unroll),
             prefill=lambda p, b, unroll=False: zam.prefill(p, b, cfg, unroll),
-            decode=lambda p, c, b, unroll=False: zam.decode_step(p, c, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: zam.decode_lockstep(p, c, b, cfg, unroll),
             init_cache=lambda bs, ml: zam.init_cache(cfg, bs, ml),
         )
     if fam == "encdec":
@@ -69,7 +69,7 @@ def get_model(cfg) -> ModelZoo:
             init=lambda key: whi.init_params(key, cfg),
             loss=lambda p, b, unroll=False: whi.loss_fn(p, b, cfg, unroll),
             prefill=lambda p, b, unroll=False: whi.prefill(p, b, cfg, unroll),
-            decode=lambda p, c, b, unroll=False: whi.decode_step(p, c, b, cfg, unroll),
+            decode=lambda p, c, b, unroll=False: whi.decode_lockstep(p, c, b, cfg, unroll),
         )
     raise ValueError(f"unknown family {fam}")
 
@@ -157,8 +157,6 @@ def grow_caches(caches: dict, new_len: int) -> dict:
     ("kv") pair [B, S, KV, hd]; recurrent state ("states") needs no growth.
     No-op for buffers already at >= new_len.
     """
-    if not isinstance(caches, dict):
-        return caches
     out = dict(caches)
     for key in ("k", "v"):
         if key in out and hasattr(out[key], "shape"):

@@ -17,7 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .layers import (activation, apply_rope, decode_attention, dense_init,
+from .layers import (activation, apply_rope, attend_kv_length, dense_init,
                      linear, rms_norm, sdpa, split_keys)
 from . import transformer as tfm
 
@@ -178,55 +178,101 @@ def prefill(params, batch, cfg, unroll: bool = False):
                            "pos": jnp.array(batch["tokens"].shape[1], jnp.int32)}
 
 
-def decode_step(params, caches, batch, cfg, unroll: bool = False):
+def encode_ctx(params, embeds, cfg, unroll: bool = False):
+    """Run the encoder at its TRUE length and project the per-decoder-layer
+    cross-attention KV.  Returns (ck, cv) [L, B, S_enc, KV, hd] — the rows
+    an ``EncoderContextPool`` stores per slot.  Admission-time entry point
+    for the serving engine (re-traced per distinct S_enc; padding is not an
+    option for a bidirectional encoder, every position attends everywhere).
+    """
+    enc_out = encode(params, embeds, cfg, unroll)
+    B, Se, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    def body(carry, lp):
+        k = linear(lp["c_wk"], enc_out).reshape(B, Se, KV, hd)
+        v = linear(lp["c_wv"], enc_out).reshape(B, Se, KV, hd)
+        return carry, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec"])
+    return ck, cv
+
+
+def unified_step(params, view, batch, cfg, *, attn_backend=None,
+                 unroll: bool = False):
+    """One serving step for the enc-dec family over an ``EncDecPoolView``:
+    decoder self-attention writes fresh KV into the slot arenas and attends
+    in place (cursor as length mask, exactly the transformer path), cross
+    attention reads each lane's read-only encoder context rows masked to
+    its true length (``attend_kv_length`` — non-causal, so chunked prefill
+    and fused decode see identical context math).
+
+    Returns (logits [B,S,V], (k, v)) — the updated self-attention arenas
+    (``ck``/``cv`` ride through untouched and are NOT returned)."""
+    import dataclasses as _dc
     tokens = batch["tokens"]
-    B = tokens.shape[0]
+    B, S = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
-    pos = caches["pos"]
+    positions = tfm._pool_positions(view.cursor, S, cfg)
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
-    def body(h, lp, kc, vc):
+    def block(lp, h, k_l, v_l, ck_l, cv_l):
         hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
-        q = linear(lp["wq"], hn).reshape(B, 1, H, hd)
-        k1 = linear(lp["wk"], hn).reshape(B, 1, KV, hd)
-        v1 = linear(lp["wv"], hn).reshape(B, 1, KV, hd)
-        p = jnp.broadcast_to(pos, (B, 1))
-        q = apply_rope(q, p, cfg.rope_theta)
-        k1 = apply_rope(k1, p, cfg.rope_theta)
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k1.astype(kc.dtype), pos, 1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v1.astype(vc.dtype), pos, 1)
-        clen = jnp.full((B,), pos + 1, jnp.int32)
-        h = h + linear(lp["wo"], decode_attention(q, kc, vc, clen).reshape(B, 1, -1))
-        # cross attention over the (fixed) encoder KV
+        q = linear(lp["wq"], hn).reshape(B, S, H, hd)
+        k = linear(lp["wk"], hn).reshape(B, S, KV, hd)
+        v = linear(lp["wv"], hn).reshape(B, S, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_l, v_l = view.write_layer(k_l, v_l, k, v)
+        attn = tfm.attend_over_pool(q, _dc.replace(view, k=k_l, v=v_l),
+                                    backend=attn_backend)
+        h = h + linear(lp["wo"], attn.reshape(B, S, -1))
         cn = rms_norm(h, lp["cross_norm"], cfg.norm_eps)
-        cq = linear(lp["c_wq"], cn).reshape(B, 1, H, hd)
-        clen_e = jnp.full((B,), lp["_ck"].shape[1], jnp.int32)
-        h = h + linear(lp["c_wo"],
-                       decode_attention(cq, lp["_ck"], lp["_cv"], clen_e
-                                        ).reshape(B, 1, -1))
+        cq = linear(lp["c_wq"], cn).reshape(B, S, H, hd)
+        ckr, cvr = view.lane_ctx(ck_l, cv_l)
+        c = attend_kv_length(cq, ckr, cvr, view.ctx_len)
+        h = h + linear(lp["c_wo"], c.reshape(B, S, -1))
         m = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
         h = h + linear(lp["w_down"], activation(cfg.act, linear(lp["w_up"], m)))
-        return h, kc, vc
-
-    def scan_body(h, xs):
-        lp, kc, vc, ck, cv = xs
-        lp = dict(lp); lp["_ck"] = ck; lp["_cv"] = cv
-        h, kc, vc = body(h, lp, kc, vc)
-        return h, (kc, vc)
+        return h, k_l, v_l
 
     if unroll:
         ks, vs = [], []
         for i in range(cfg.n_layers):
-            lp = dict(jax.tree.map(lambda p: p[i], params["dec"]))
-            lp["_ck"] = caches["ck"][i]; lp["_cv"] = caches["cv"][i]
-            x, kc, vc = body(x, lp, caches["k"][i], caches["v"][i])
-            ks.append(kc); vs.append(vc)
-        new_k, new_v = jnp.stack(ks), jnp.stack(vs)
+            lp = jax.tree.map(lambda p: p[i], params["dec"])
+            x, k_l, v_l = block(lp, x, view.k[i], view.v[i],
+                                view.ck[i], view.cv[i])
+            ks.append(k_l)
+            vs.append(v_l)
+        k, v = jnp.stack(ks), jnp.stack(vs)
     else:
-        x, (new_k, new_v) = jax.lax.scan(
-            scan_body, x, (params["dec"], caches["k"], caches["v"],
-                           caches["ck"], caches["cv"]))
+        def scan_body(h, xs):
+            lp, k_l, v_l, ck_l, cv_l = xs
+            h, k_l, v_l = block(lp, h, k_l, v_l, ck_l, cv_l)
+            return h, (k_l, v_l)
+
+        x, (k, v) = jax.lax.scan(
+            scan_body, x,
+            (params["dec"], view.k, view.v, view.ck, view.cv))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = linear(params["lm_head"], x)[:, 0]
-    return logits, {"k": new_k, "v": new_v, "ck": caches["ck"],
-                    "cv": caches["cv"], "pos": pos + 1}
+    logits = linear(params["lm_head"], x)
+    return logits, (k, v)
+
+
+def decode_lockstep(params, caches, batch, cfg, unroll: bool = False):
+    """Reference lock-step decode via ``unified_step`` (S=1, identity lane
+    map; every row's context is the full encoder output) — same float
+    operation order as the engine's fused decode."""
+    from ..serving.state_pool import EncDecPoolView
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = caches["pos"]
+    Se = caches["ck"].shape[2]
+    view = EncDecPoolView(k=caches["k"], v=caches["v"], rows=None,
+                          cursor=tfm._cursor_vec(pos, B),
+                          n_new=jnp.ones((B,), jnp.int32),
+                          ck=caches["ck"], cv=caches["cv"],
+                          ctx_len=jnp.full((B,), Se, jnp.int32))
+    logits, (k, v) = unified_step(params, view, batch, cfg, unroll=unroll)
+    return logits[:, -1], {"k": k, "v": v, "ck": caches["ck"],
+                           "cv": caches["cv"], "pos": pos + 1}

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from .layers import dense_init, linear, rms_norm, split_keys
-from .linear_attn import chunked_gla, gla_decode_step
+from .linear_attn import chunked_gla, masked_gates
 
 
 def _di(cfg):
@@ -88,8 +88,12 @@ def _mlstm_qkvgates(lp, xc, cfg):
     return q, k, v, log_f, log_i
 
 
-def mlstm_block(lp, x, cfg, state=None, chunk: int = 64):
-    """Full-sequence mLSTM block. Returns (y, new_state)."""
+def mlstm_block(lp, x, cfg, state=None, chunk: int = 64, valid=None):
+    """Full-sequence mLSTM block. Returns (y, new_state).
+
+    ``valid`` [B,S] marks the real tokens of a right-padded batch; padded
+    positions get neutral gates (masked_gates) so the carried state is
+    bit-identical to processing the real prefix alone."""
     from ..parallel import policy as pol
     B, S, d = x.shape
     # xlstm-350m is small (4 heads): DP-only activation layout — every [B,...]
@@ -99,24 +103,11 @@ def mlstm_block(lp, x, cfg, state=None, chunk: int = 64):
     up = pol.shard(linear(lp["w_up"], h), ("fsdp", None, None))
     xc, xg = jnp.split(up, 2, axis=-1)                           # [B,S,di] each
     q, k, v, log_f, log_i = _mlstm_qkvgates(lp, xc, cfg)
+    if valid is not None:
+        log_f, log_i = masked_gates(log_f, log_i, valid)
     y, new_state = chunked_gla(q, k, v, log_f, log_i, chunk=chunk,
                                normalizer=True, initial_state=state)
     y = y.reshape(B, S, -1) * jax.nn.silu(xg)
-    return x + linear(lp["w_down"], y), new_state
-
-
-def mlstm_decode(lp, x, cfg, state):
-    """x: [B,1,d]."""
-    from ..parallel import policy as pol
-    B = x.shape[0]
-    x = pol.shard(x, ("fsdp", None, None))
-    h = rms_norm(x, lp["norm"], cfg.norm_eps)
-    up = linear(lp["w_up"], h)
-    xc, xg = jnp.split(up, 2, axis=-1)
-    q, k, v, log_f, log_i = _mlstm_qkvgates(lp, xc, cfg)
-    y, new_state = gla_decode_step(q[:, 0], k[:, 0], v[:, 0], log_f[:, 0],
-                                   log_i[:, 0], state, normalizer=True)
-    y = y.reshape(B, 1, -1) * jax.nn.silu(xg)
     return x + linear(lp["w_down"], y), new_state
 
 
@@ -140,7 +131,7 @@ def _slstm_step(lp, cfg, carry, zifo_t):
     return (c_new, n_new, h_new, m_new), h_new
 
 
-def slstm_block(lp, x, cfg, state=None):
+def slstm_block(lp, x, cfg, state=None, valid=None):
     from ..parallel import policy as pol
     B, S, d = x.shape
     di = _di(cfg)
@@ -154,24 +145,23 @@ def slstm_block(lp, x, cfg, state=None):
     if state is None:
         z = jnp.zeros((B, H, dh), jnp.float32)
         state = (z, z, z, jnp.full((B, H, dh), -1e30, jnp.float32))
-    carry, hs = jax.lax.scan(partial(_slstm_step, lp, cfg), state,
-                             zifo.swapaxes(0, 1))                 # scan over S
+    if valid is None:
+        carry, hs = jax.lax.scan(partial(_slstm_step, lp, cfg), state,
+                                 zifo.swapaxes(0, 1))             # scan over S
+    else:
+        # padded positions: where-select keeps each lane's carry bitwise
+        # untouched (the scan still runs, its result is discarded per lane)
+        def step(carry, xs):
+            zifo_t, valid_t = xs
+            new_carry, h = _slstm_step(lp, cfg, carry, zifo_t)
+            vm = valid_t[:, None, None]
+            kept = tuple(jnp.where(vm, nc, oc)
+                         for nc, oc in zip(new_carry, carry))
+            return kept, h
+        carry, hs = jax.lax.scan(step, state,
+                                 (zifo.swapaxes(0, 1), valid.swapaxes(0, 1)))
     y = hs.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype) * jax.nn.silu(xg)
     return x + linear(lp["w_down"], y), carry
-
-
-def slstm_decode(lp, x, cfg, state):
-    B = x.shape[0]
-    di = _di(cfg)
-    H = cfg.n_heads
-    dh = di // H
-    h_in = rms_norm(x, lp["norm"], cfg.norm_eps)
-    up = linear(lp["w_up"], h_in)
-    xc, xg = jnp.split(up, 2, axis=-1)
-    zifo = linear(lp["w_slstm"], xc).reshape(B, 4, H, dh)
-    state, h_new = _slstm_step(lp, cfg, state, zifo)
-    y = h_new.reshape(B, 1, di).astype(x.dtype) * jax.nn.silu(xg)
-    return x + linear(lp["w_down"], y), state
 
 
 # ------------------------------------------------------------ full model ---
@@ -222,8 +212,11 @@ def init_state(cfg, batch_size: int):
     states = []
     for i in range(cfg.n_layers):
         if _is_slstm(cfg, i):
-            z = jnp.zeros((batch_size, H, dh), jnp.float32)
-            states.append((z, z, z, jnp.full((batch_size, H, dh), -1e30, jnp.float32)))
+            # three SEPARATE buffers: serving donates the state arenas into
+            # the jitted step, and aliased leaves would be donated twice
+            states.append(tuple(jnp.zeros((batch_size, H, dh), jnp.float32)
+                                for _ in range(3))
+                          + (jnp.full((batch_size, H, dh), -1e30, jnp.float32),))
         else:
             states.append((jnp.zeros((batch_size, H, dh, dh), jnp.float32),
                            jnp.zeros((batch_size, H, dh), jnp.float32)))
@@ -236,18 +229,69 @@ def prefill(params, batch, cfg, unroll: bool = False):
                            "pos": jnp.array(batch["tokens"].shape[1], jnp.int32)}
 
 
-def decode_step(params, caches, batch, cfg, unroll: bool = False):
+def lane_init(cfg, i: int, batch_size: int):
+    """Layer ``i``'s fresh state for ``batch_size`` lanes — the per-layer
+    unit of ``init_state``, used by ``unified_step`` to initialise fresh
+    lanes in-jit (RecurrentStateView.select_fresh)."""
+    di = _di(cfg)
+    H = cfg.n_heads
+    dh = di // H
+    if _is_slstm(cfg, i):
+        z = jnp.zeros((batch_size, H, dh), jnp.float32)
+        return (z, z, z, jnp.full((batch_size, H, dh), -1e30, jnp.float32))
+    return (jnp.zeros((batch_size, H, dh, dh), jnp.float32),
+            jnp.zeros((batch_size, H, dh), jnp.float32))
+
+
+def unified_step(params, view, batch, cfg, *, unroll: bool = False):
+    """One serving step over a ``RecurrentStateView`` — the xLSTM analogue
+    of ``transformer.unified_step``.
+
+    ``batch["tokens"]`` [B,S] holds each lane's next tokens right-padded to
+    S; ``view.n_new`` masks the padding (neutral gates / carry selects), so
+    per-lane state after the step is bit-identical to running the real
+    tokens alone.  Lanes at cursor 0 pick up their fresh family init state
+    inside the jit; lanes with n_new == 0 (inactive / padding rows) leave
+    their slot's state leaves bitwise untouched.  Returns
+    (logits [B,S,V], new state arenas) — arenas to be pool.adopt()ed.
+    """
     tokens = batch["tokens"]
+    B, S = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
-    states = caches["states"]
-    new_states = []
+    valid = jnp.arange(S)[None, :] < view.n_new[:, None]          # [B,S]
+    took = (view.n_new > 0)
+    new_arenas = []
     for i in range(cfg.n_layers):
         lp = _layer_params(params, i)
+        lane_st = view.gather_layer(i)
+        st = view.select_fresh(lane_st, lane_init(cfg, i, B))
         if _is_slstm(cfg, i):
-            x, s = slstm_decode(lp, x, cfg, states[i])
+            x, s = slstm_block(lp, x, cfg, state=st, valid=valid)
         else:
-            x, s = mlstm_decode(lp, x, cfg, states[i])
-        new_states.append(s)
+            x, s = mlstm_block(lp, x, cfg, state=st, valid=valid)
+        # inactive lanes: restore the slot's original bits (masking already
+        # makes the update a numeric no-op; this also keeps signed zeros)
+        s = jax.tree.map(
+            lambda new, old: jnp.where(
+                took.reshape(took.shape + (1,) * (new.ndim - 1)), new, old),
+            s, lane_st)
+        new_arenas.append(view.scatter_layer(i, s))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = linear(params["lm_head"], x)[:, 0]
-    return logits, {"states": new_states, "pos": caches["pos"] + 1}
+    logits = linear(params["lm_head"], x)
+    return logits, new_arenas
+
+
+def decode_lockstep(params, caches, batch, cfg, unroll: bool = False):
+    """Reference lock-step decode: one token for every row of the batch.
+
+    Built on ``unified_step`` (S=1 over the whole batch as one state view)
+    so its float operation order is IDENTICAL to the engine's fused decode
+    — the parity oracle for engine token streams."""
+    from ..serving.state_pool import RecurrentStateView
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    cursor = jnp.broadcast_to(jnp.asarray(caches["pos"], jnp.int32), (B,))
+    view = RecurrentStateView(caches["states"], None, cursor,
+                              jnp.ones((B,), jnp.int32))
+    logits, new_states = unified_step(params, view, batch, cfg, unroll=unroll)
+    return logits[:, -1], {"states": new_states, "pos": caches["pos"] + 1}

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from .layers import dense_init, linear, rms_norm, split_keys
-from .linear_attn import chunked_gla, gla_decode_step
+from .linear_attn import chunked_gla, masked_gates
 from . import transformer as tfm
 
 
@@ -87,7 +87,7 @@ def _ssm_inputs(lp, x, cfg):
     return z, q, k, v, log_f, xh
 
 
-def mamba_block(lp, x, cfg, state=None, chunk: int = 128):
+def mamba_block(lp, x, cfg, state=None, chunk: int = 128, valid=None):
     from ..parallel import policy as pol
     B_, S, d = x.shape
     di, H, N = _dims(cfg)
@@ -95,24 +95,15 @@ def mamba_block(lp, x, cfg, state=None, chunk: int = 128):
     h = rms_norm(x, lp["norm"], cfg.norm_eps)
     z, q, k, v, log_f, xh = _ssm_inputs(lp, h, cfg)
     z = pol.shard(z, ("fsdp", None, "model"))
-    y, new_state = chunked_gla(q, k, v, log_f, None, chunk=chunk,
+    log_i = None
+    if valid is not None:
+        # right-padded serving batch: neutral gates keep the carried SSM
+        # state bit-identical to processing the real prefix alone
+        log_f, log_i = masked_gates(log_f, log_i, valid)
+    y, new_state = chunked_gla(q, k, v, log_f, log_i, chunk=chunk,
                                normalizer=False, initial_state=state)
     y = y + xh * lp["D"][None, None, :, None].astype(y.dtype)
     y = y.reshape(B_, S, di) * jax.nn.silu(z)
-    return x + linear(lp["out_proj"], y), new_state
-
-
-def mamba_decode(lp, x, cfg, state):
-    from ..parallel import policy as pol
-    B_ = x.shape[0]
-    di, H, N = _dims(cfg)
-    x = pol.shard(x, ("fsdp", None, None))
-    h = rms_norm(x, lp["norm"], cfg.norm_eps)
-    z, q, k, v, log_f, xh = _ssm_inputs(lp, h, cfg)
-    y, new_state = gla_decode_step(q[:, 0], k[:, 0], v[:, 0], log_f[:, 0],
-                                   None, state, normalizer=False)
-    y = y + xh[:, 0] * lp["D"][None, :, None].astype(y.dtype)
-    y = y.reshape(B_, 1, di) * jax.nn.silu(z)
     return x + linear(lp["out_proj"], y), new_state
 
 
@@ -190,22 +181,77 @@ def init_cache(cfg, batch_size: int, max_len: int):
     return {"states": states, "kv": kvs, "pos": jnp.zeros((), jnp.int32)}
 
 
-def decode_step(params, caches, batch, cfg, unroll: bool = False):
+def lane_init(cfg, i: int, batch_size: int):
+    """Layer ``i``'s fresh SSM state for ``batch_size`` lanes (the
+    per-layer unit of ``init_cache``'s states list)."""
+    di, H, N = _dims(cfg)
+    return (jnp.zeros((batch_size, H, N, cfg.ssm_head_dim), jnp.float32),
+            None)
+
+
+def unified_step(params, view, batch, cfg, *, attn_backend=None,
+                 unroll: bool = False):
+    """One serving step for the hybrid family over a ``HybridPoolView``:
+    mamba layers run on the recurrent-state sub-view (``view.state``, gate
+    masking + in-jit fresh-state select), shared-attention applications run
+    on the KV sub-view (``view.kv`` — SlotPoolView OR PagedPoolView)
+    through the same in-place block as the transformer engine, all inside
+    ONE jitted step.  The sub-views carry independent ``n_new``: decode
+    writes KV for every lane (overwritten-before-read, harmless) but masks
+    state updates to active lanes.
+
+    Returns (logits [B,S,V], (k, v) stacked [n_attn, ...] arenas | None,
+    new state arenas)."""
     tokens = batch["tokens"]
+    B_, S = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
-    pos = caches["pos"]
-    new_states, new_kvs = [], []
+    sview, kview = view.state, view.kv
+    valid = jnp.arange(S)[None, :] < sview.n_new[:, None]         # [B,S]
+    took = sview.n_new > 0
+    scfg = _shared_block_cfg(cfg)
+    positions = tfm._pool_positions(kview.cursor, S, scfg) \
+        if cfg.attn_every else None
+    new_states, ks, vs = [], [], []
     ai = 0
     for i in range(cfg.n_layers):
         lp = jax.tree.map(lambda p: p[i], params["mamba"])
-        x, s = mamba_decode(lp, x, cfg, caches["states"][i])
-        new_states.append(s)
+        lane_st = sview.gather_layer(i)
+        st = sview.select_fresh(lane_st, lane_init(cfg, i, B_))
+        x, s = mamba_block(lp, x, cfg, state=st, valid=valid)
+        s = jax.tree.map(
+            lambda new, old: jnp.where(
+                took.reshape(took.shape + (1,) * (new.ndim - 1)), new, old),
+            s, lane_st)
+        new_states.append(sview.scatter_layer(i, s))
         if cfg.attn_every and (i % cfg.attn_every) == (cfg.attn_every - 1):
-            kc, vc = caches["kv"][ai]
-            x, kc, vc = tfm.block_decode(params["shared_attn"], x, kc, vc,
-                                         pos, _shared_block_cfg(cfg))
-            new_kvs.append((kc, vc))
+            x, k_l, v_l = tfm._block_step(params["shared_attn"], x,
+                                          kview.k[ai], kview.v[ai], kview,
+                                          positions, scfg, attn_backend)
+            ks.append(k_l)
+            vs.append(v_l)
             ai += 1
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = linear(params["lm_head"], x)[:, 0]
-    return logits, {"states": new_states, "kv": new_kvs, "pos": pos + 1}
+    logits = linear(params["lm_head"], x)
+    kv = (jnp.stack(ks), jnp.stack(vs)) if ks else None
+    return logits, kv, new_states
+
+
+def decode_lockstep(params, caches, batch, cfg, unroll: bool = False):
+    """Reference lock-step decode via ``unified_step`` (S=1, identity lane
+    map) — same float operation order as the engine's fused decode."""
+    from ..serving.cache_pool import SlotPoolView
+    from ..serving.state_pool import HybridPoolView, RecurrentStateView
+    tokens = batch["tokens"]
+    B_ = tokens.shape[0]
+    pos = caches["pos"]
+    cursor = tfm._cursor_vec(pos, B_)
+    ones = jnp.ones((B_,), jnp.int32)
+    sview = RecurrentStateView(caches["states"], None, cursor, ones)
+    kvs = caches["kv"]
+    k = jnp.stack([kv[0] for kv in kvs]) if kvs else None
+    v = jnp.stack([kv[1] for kv in kvs]) if kvs else None
+    kview = SlotPoolView(k=k, v=v, rows=None, cursor=cursor, n_new=ones)
+    logits, kv, states = unified_step(params, HybridPoolView(kview, sview),
+                                      batch, cfg, unroll=unroll)
+    new_kvs = [(kv[0][i], kv[1][i]) for i in range(len(kvs))] if kvs else []
+    return logits[:, -1], {"states": states, "kv": new_kvs, "pos": pos + 1}

@@ -21,6 +21,9 @@ import numpy as np
 
 @dataclasses.dataclass
 class RequestMetrics:
+    # model family that served the request ("" outside the engine) — keys
+    # the per-family breakdown of mixed-family benchmark windows
+    family: str = ""
     arrival: float = 0.0               # submitted to the queue
     admitted: float = 0.0              # scheduled into a slot (prefill start)
     first_token: float = 0.0           # first generated token emitted
@@ -91,6 +94,23 @@ def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
             "hist": histogram(chunks),
         },
     }
+    families = sorted({m.family for m in done if m.family})
+    if len(families) > 1 or (families and families != [""]):
+        # mixed-family window: per-family throughput and latency tails,
+        # over the SAME wall clock (the families share the step loop, so
+        # each family's tok/s is its share of the window, not a solo run)
+        out["families"] = {
+            fam: {
+                "n_requests": len(sub),
+                "total_tokens": sum(m.n_tokens for m in sub),
+                "tok_per_s": (sum(m.n_tokens for m in sub) / wall_s
+                              if wall_s > 0 else float("nan")),
+                "ttft": percentiles([m.ttft for m in sub]),
+                "itl": percentiles([g for m in sub for g in m.itl]),
+            }
+            for fam in families
+            for sub in [[m for m in done if m.family == fam]]
+        }
     return out
 
 

@@ -23,9 +23,13 @@ structured-outlier deployment) are served by the same engine.
 from .cache_pool import (CachePoolError, CapacityError, DoubleFree,
                          KVCachePool, SlotKVPool, SlotPoolView)
 from .engine import KV_LAYOUTS, ServingEngine, SUPPORTED_FAMILIES
+from .families import (EncDecAdapter, FamilyAdapter, HybridAdapter,
+                       RecurrentAdapter, TransformerAdapter, build_adapter)
 from .paged import OutOfBlocks, PagedKVPool, PagedPoolView
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
+from .state_pool import (EncDecPoolView, EncoderContextPool, HybridPoolView,
+                         RecurrentStatePool, RecurrentStateView)
 from .scheduler import (CHUNK_QUANTUM, QueueFull, RequestQueue, plan_chunks,
                         resolve_token_budget, validate_token_budget)
 from .trace import (TraceRequest, load_trace, long_prompt_trace,

@@ -59,9 +59,25 @@ Works unchanged for dense weights or ``SparseWeight`` compressed params
 jitted step functions, so the 8:16 (+structured outlier) serving path gets
 continuous batching and chunked prefill for free.
 
-Supported families: token-input transformers with [L, B, S, KV, hd] KV
-caches ("dense", "moe").  Recurrent/enc-dec families keep the one-shot path
-in launch/serve.py.
+Supported families: every family in the model zoo, through one family
+adapter layer (serving/families.py).  The engine owns scheduling — queue,
+token budget, chunk planning, slot lifecycle, sampling — against one
+primary pool; the adapter owns what a family actually keeps per request
+(KV arenas, recurrent-state slots, encoder context rows) and the jitted
+step functions over its ``unified_step``:
+
+  dense/moe  Slot/Paged KV pool (this module's original path, verbatim)
+  ssm        RecurrentStatePool only — O(1) state per request, no KV, so
+             the chunk quantum widens to the whole token budget (no block
+             math, no shape ladder worth bounding) and preemption swaps
+             the state out and back (recompute would change float
+             summation order)
+  hybrid     shared-attention KV pool + mamba state slots under one slot
+             identity, slot or paged (paged disables the prefix cache:
+             cached KV blocks cannot reconstruct SSM state)
+  encdec     decoder KV slots + read-only encoder context rows; the
+             encoder runs once at admission at the TRUE input length
+             (``submit(embeds=...)``)
 
 Chunk batching: chunks at the same cursor are padded to power-of-two length
 buckets and grouped, so the number of distinct compiled step shapes stays
@@ -95,10 +111,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import transformer as tfm
-from ..parallel import policy as pol
-from .cache_pool import CachePoolError, SlotKVPool, SlotPoolView
-from .paged import OutOfBlocks, PagedKVPool, PagedPoolView
+from . import families
+from .cache_pool import CachePoolError
+from .paged import OutOfBlocks
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .sampling import sample_tokens
@@ -106,7 +121,7 @@ from .scheduler import (CHUNK_QUANTUM, QueueFull, RequestQueue,
                         pick_preemption_victim, plan_chunks,
                         resolve_token_budget)
 
-SUPPORTED_FAMILIES = ("dense", "moe")
+SUPPORTED_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec")
 KV_LAYOUTS = ("slot", "paged")
 
 
@@ -126,39 +141,51 @@ class ServingEngine:
                  block_size: int = 16, n_blocks: int | None = None,
                  prefix_caching: bool = True, lookahead_blocks: int = 1,
                  paged_attn_backend: str | None = None, mesh=None,
-                 clock=time.monotonic):
+                 max_ctx: int | None = None, clock=time.monotonic):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServingEngine supports {SUPPORTED_FAMILIES} families, not "
-                f"{cfg.family!r}; use the one-shot path in launch/serve.py")
+                f"{cfg.family!r}")
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
                              f"not {kv_layout!r}")
         self.cfg = cfg
         self.placement = ServingPlacement(mesh, cfg)
         # one sharding-tree walk serves both the initial device_put and the
-        # jitted functions' explicit in_shardings below
+        # adapter's jitted functions' explicit in_shardings
         psh = self.placement.param_shardings(params)
         self.params = params if psh is None else jax.device_put(params, psh)
+        # the family adapter owns the state substrate (pools + arenas) and
+        # the jitted step functions; the engine schedules against its
+        # primary pool.  ssm coerces the layout to "slot" (it has no KV to
+        # page); encdec rejects "paged"
+        if cfg.family == "ssm":
+            kv_layout = "slot"
+        self.adapter = families.build_adapter(
+            cfg, self.params, self.placement, psh, kv_layout=kv_layout,
+            n_slots=n_slots, max_len=max_len, block_size=block_size,
+            n_blocks=n_blocks, prefix_caching=prefix_caching,
+            paged_attn_backend=paged_attn_backend, max_ctx=max_ctx)
         self.kv_layout = kv_layout
-        if kv_layout == "paged":
-            self.pool = PagedKVPool(cfg, n_slots, max_len,
-                                    block_size=block_size, n_blocks=n_blocks,
-                                    prefix_caching=prefix_caching,
-                                    placement=self.placement)
-        else:
-            self.pool = SlotKVPool(cfg, n_slots, max_len,
-                                   placement=self.placement)
+        self.pool = self.adapter.pool
+        # kept for introspection and the compiled-cost tests
+        self._step_fn = self.adapter._step_fn
+        self._decode_fn = self.adapter._decode_fn
         self.queue = RequestQueue(max_queue, queue_timeout_s)
         # per-step prefill token budget (max_prefill_per_step is the
         # deprecated request-count knob, aliased with a one-time warning).
         # resolve -> validate_token_budget raises a construction-time
         # ValueError when the budget cannot cover the chunk quantum or the
         # longest admissible prompt's first chunk — instead of a deep
-        # stall inside scheduler.plan_chunks
-        self.token_budget = resolve_token_budget(token_budget,
-                                                 max_prefill_per_step,
-                                                 max_len)
+        # stall inside scheduler.plan_chunks.  Pure-recurrent requests
+        # carry O(1) state: no block math and no shape ladder worth
+        # bounding, so the quantum floor check is waived (quantum=1) and
+        # the effective planning quantum widens to the whole budget
+        self.token_budget = resolve_token_budget(
+            token_budget, max_prefill_per_step, max_len,
+            quantum=1 if cfg.family == "ssm" else CHUNK_QUANTUM)
+        self.chunk_quantum = (self.token_budget if cfg.family == "ssm"
+                              else CHUNK_QUANTUM)
         self.lookahead_blocks = lookahead_blocks
         self.running: dict[int, Request] = {}        # slot/row -> request
         self.finished: list[Request] = []
@@ -180,62 +207,14 @@ class ServingEngine:
         self._slot_logits = self.placement.place_replicated(
             jnp.zeros((n_slots, cfg.vocab), jnp.float32))
 
-        # Every traced function is wrapped in policy.suspended() so an
-        # ambient activation-sharding policy can't leak into serving traces
-        # (it would flip MoE to the capacity-bounded path — module docstring).
-        def suspend(fn):
-            def traced(*args):
-                with pol.suspended():
-                    return fn(*args)
-            return traced
-
-        sh = self.placement.step_fn_shardings(psh, kv_layout)
-
-        def jit(fn, role, donate=()):
-            """jit with the placement's explicit in/out shardings for this
-            role; a plain single-device jit when no mesh is set."""
-            return jax.jit(suspend(fn), donate_argnums=donate, **sh[role])
-
-        # the TWO step functions of the unified attend-over-pool path:
-        # chunk-or-prefill (any S at any cursor; retraces once per
-        # (batch, bucket) shape — the cursor is data, not shape, so the
-        # ladder is small and per-step HBM cost is cursor-independent) and
-        # the fused decode (S=1 over every lane; compiles once).  k/v are
-        # donated: the pool adopts the step's output arenas, so the
-        # multi-GB caches update in place instead of being copied every
-        # token (out shardings == in shardings, so donation stays in place
-        # shard-for-shard on the mesh).
-        if kv_layout == "paged":
-            trash = self.pool.trash_block
-            self._step_fn = jit(
-                lambda p, k, v, bt, cur, nn, t: tfm.unified_step(
-                    p, PagedPoolView(k, v, bt, cur, nn, trash),
-                    {"tokens": t}, cfg, attn_backend=paged_attn_backend),
-                "step", donate=(1, 2))
-            self._decode_fn = jit(
-                lambda p, k, v, bt, pos, t: tfm.unified_step(
-                    p, PagedPoolView(k, v, bt, pos, jnp.ones_like(pos),
-                                     trash),
-                    {"tokens": t}, cfg, attn_backend=paged_attn_backend),
-                "decode", donate=(1, 2))
-        else:
-            self._step_fn = jit(
-                lambda p, k, v, rows, cur, nn, t: tfm.unified_step(
-                    p, SlotPoolView(k, v, rows, cur, nn), {"tokens": t},
-                    cfg),
-                "step", donate=(1, 2))
-            self._decode_fn = jit(
-                lambda p, k, v, pos, t: tfm.unified_step(
-                    p, SlotPoolView(k, v, None, pos, jnp.ones_like(pos)),
-                    {"tokens": t}, cfg),
-                "decode", donate=(1, 2))
-
     # ------------------------------------------------------------ admission
     def submit(self, prompt, sampling: SamplingParams | None = None,
-               on_token=None, on_finish=None) -> Request:
+               on_token=None, on_finish=None, embeds=None) -> Request:
         """Enqueue a request; raises QueueFull when admission control
         rejects (queue at capacity) and ValueError when the request can
-        never fit the KV pool."""
+        never fit the pool.  ``embeds`` is the enc-dec family's encoder
+        input ([S_enc, d] frontend features, run once at admission); other
+        families reject it."""
         sampling = sampling or SamplingParams()
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
         if not prompt:
@@ -248,8 +227,10 @@ class ServingEngine:
                 f"prompt ({len(prompt)}) + max_new_tokens "
                 f"({sampling.max_new_tokens}) exceeds KV capacity "
                 f"{capacity}")
+        self.adapter.validate_submit(prompt, sampling, embeds)
         req = Request(self._next_id, prompt, sampling,
-                      on_token=on_token, on_finish=on_finish)
+                      on_token=on_token, on_finish=on_finish, embeds=embeds)
+        req.metrics.family = self.cfg.family
         self._next_id += 1
         req.metrics.arrival = self._clock()
         if not self.queue.try_push(req):
@@ -295,6 +276,7 @@ class ServingEngine:
         """Engine-level counters plus the pool's memory/prefix accounting."""
         out = {"n_steps": self.n_steps, "max_running": self.max_running,
                "n_preemptions": self.n_preemptions,
+               "family": self.cfg.family,
                "kv_layout": self.kv_layout,
                "token_budget": self.token_budget,
                "placement": self.placement.describe()}
@@ -366,12 +348,16 @@ class ServingEngine:
             if popped is not req:
                 raise CachePoolError("queue head changed during planning")
             self._install_running(req, row, now)
+            # family admission work: swap-restore (stateful slot layouts
+            # resume with their saved state/KV/context and cursor), or the
+            # enc-dec encoder run — may raise past n_cached
+            n_cached = max(n_cached, self.adapter.on_admit(req, row))
             req.prefill_cursor = n_cached
             stats["admitted"] += 1
             return len(seq) - n_cached
 
         chunk_plan = plan_chunks(spec, queued, self.token_budget,
-                                 CHUNK_QUANTUM, try_admit)
+                                 self.chunk_quantum, try_admit)
 
         runnable = []
         for req, take in chunk_plan:
@@ -459,10 +445,9 @@ class ServingEngine:
         else:
             self.pool.chunk_end_check(cursor, takes)
             lanes = self.pool.lane_rows(rows, B)
-        logits, (k, v) = self._step_fn(
-            self.params, self.pool.k, self.pool.v, jnp.asarray(lanes),
-            jnp.asarray(cur), jnp.asarray(n_new), jnp.asarray(tokens))
-        self.pool.adopt(k, v)
+        logits = self.adapter.step_chunk(
+            rows, jnp.asarray(lanes), jnp.asarray(cur), jnp.asarray(n_new),
+            jnp.asarray(tokens))
         self.pool.advance_prefill(rows, [cursor + t for t in takes])
         stats["prefill_tokens"] += sum(takes)
         stats["prefill_chunks"] += n
@@ -498,6 +483,11 @@ class ServingEngine:
                       if exclude is not None else self.running)
         victim_slot = pick_preemption_victim(candidates)
         req = self.running.pop(victim_slot)
+        # stateful slot-layout families swap their state out (recompute
+        # would change float summation order); attention-only families
+        # return None and recompute exactly
+        req.swap = self.adapter.save_for_preempt(
+            req, victim_slot, len(self._written_seq(req)))
         if self.kv_layout == "paged":
             self.pool.register_prefix(victim_slot, self._written_seq(req))
         self.pool.release(victim_slot)
@@ -540,18 +530,9 @@ class ServingEngine:
                     active = self._decode_rows()
             if not active:
                 return 0
-            stats["decoded"] = len(active)
-            tokens = jnp.asarray(self._last_token[:, None])
-            logits, (k, v) = self._decode_fn(
-                self.params, self.pool.k, self.pool.v,
-                self.pool.block_tables, self.pool.pos, tokens)
-        else:
-            stats["decoded"] = len(active)
-            tokens = jnp.asarray(self._last_token[:, None])
-            logits, (k, v) = self._decode_fn(
-                self.params, self.pool.k, self.pool.v, self.pool.pos,
-                tokens)
-        self.pool.adopt(k, v)
+        stats["decoded"] = len(active)
+        tokens = jnp.asarray(self._last_token[:, None])
+        logits = self.adapter.step_decode(tokens, active)
         self._slot_logits = logits[:, 0].astype(jnp.float32)
         n_finished = self._emit_tokens(active)
         advanced = np.zeros((self.pool.n_slots,), bool)

@@ -113,6 +113,44 @@ class ServingPlacement:
             else None
         return NamedSharding(self.mesh, P(None, None, None, axes, None))
 
+    def state_spec(self, shape) -> P:
+        """Spec for one recurrent-state arena leaf ``[slots, H, ...]``.
+
+        Same parity discipline as the projections: only dims that are pure
+        OUTPUTS of the recurrence may shard, so no dot product is ever
+        split into partial sums.
+
+          * dim 1 (heads) over "model" when divisible — head-local
+            recurrences (mLSTM memory, SSM state, sLSTM carries) never
+            contract over heads, so this is always parity-safe;
+          * else, for ndim >= 4 leaves (matrix state ``[slots, H, dk,
+            dv]``), the LAST dim (dv): it's the value/output dim of the
+            k v^T outer product and the y = q^T C readout — never
+            contracted — while dk IS contracted by the normalizer/readout
+            and must stay whole;
+          * else replicate.  A 2/3-D leaf's trailing dims (dk, dh) all
+            feed contractions (normalizer dot, sLSTM recurrent mix), and a
+            split contraction's all-reduce perturbs the last ulp — the
+            token-identity property is worth more than sharding a small
+            vector state."""
+        model_n = self.mesh.shape["model"]
+        nd = len(shape)
+        axes = [None] * nd
+        if nd >= 2 and shape[1] % model_n == 0:
+            axes[1] = "model"
+        elif nd >= 4 and shape[-1] % model_n == 0:
+            axes[-1] = "model"
+        return P(*axes)
+
+    def state_shardings(self, states):
+        """NamedSharding pytree mirroring a recurrent-state arenas list
+        (None when no mesh)."""
+        if not self.active:
+            return None
+        return jax.tree.map(
+            lambda leaf: NamedSharding(self.mesh, self.state_spec(leaf.shape)),
+            states)
+
     def _dense_spec(self, name: str, shape) -> P:
         model_n = self.mesh.shape["model"]
         nd = len(shape)
@@ -202,6 +240,12 @@ class ServingPlacement:
         if not self.active:
             return arr
         return jax.device_put(arr, self.replicated)
+
+    def place_states(self, states):
+        """Commit recurrent-state arenas to their parity-safe layout."""
+        if not self.active:
+            return states
+        return jax.device_put(states, self.state_shardings(states))
 
     # ------------------------------------------------------------- metadata
     def describe(self) -> dict:

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 from ..runtime.metrics import RequestMetrics
 
@@ -70,6 +70,14 @@ class Request:
     # (generated tokens are kept; the resume re-prefills whatever the
     # prefix cache no longer covers)
     n_preempted: int = 0
+    # enc-dec family: precomputed encoder-frontend embeddings [S_enc, d]
+    # (the encoder runs once at admission, at the true length)
+    embeds: Any = None
+    # swap-preemption blob for stateful slot-layout families: the family
+    # adapter's saved (recurrent state, KV rows, context, position) at
+    # preemption, restored verbatim at re-admission so resumed token
+    # streams are exactly the uninterrupted ones
+    swap: Any = None
 
     @property
     def prompt_len(self) -> int:

@@ -1,0 +1,265 @@
+"""Per-request state pools beyond KV: recurrent slots and encoder context.
+
+The KV arenas of ``cache_pool.py``/``paged/`` cover softmax attention; the
+other families keep different per-request state, and this module puts it
+behind the same ``KVCachePool`` protocol so the engine schedules every
+family identically:
+
+``RecurrentStatePool``
+    Fixed-size state slots — a degenerate one-"block" arena whose "tokens"
+    axis has collapsed to O(1): each slot holds one request's recurrent
+    carries (mLSTM matrix memory + normalizer, sLSTM scalar carries,
+    Mamba2 SSM state), as a list of per-layer pytrees with leading dim
+    ``n_slots``.  Same lifecycle as ``SlotKVPool``: ``alloc``/``release``
+    manage the free list, ``adopt`` takes ownership of a jitted step's
+    donated-output state leaves, ``advance_prefill``/``advance_decode``
+    track per-slot positions.  ``save_slot``/``restore_slot`` support
+    swap-style preemption: unlike attention (whose KV can be recomputed
+    from tokens with identical results), a recurrent state recomputed
+    under different chunk boundaries differs in float summation order — so
+    the engine swaps the state out and back instead of recomputing,
+    keeping preempted-and-resumed token streams exactly identical.
+
+``RecurrentStateView``
+    What a family ``unified_step`` sees of the pool inside the jitted
+    step: per-layer gather (lane -> slot) and scatter (slot <- lane, OOB
+    lanes dropped), mirroring ``SlotPoolView`` addressing.  Fresh-state
+    initialisation happens INSIDE the jitted step: at lanes whose cursor
+    is 0 the family selects its init state (zeros, or -inf stabilizer
+    fills) instead of the slot's stale content, so slot reuse needs no
+    host-side reset and a swap-restored slot resumes untouched
+    (cursor > 0).
+
+``EncoderContextPool``
+    Read-only cross-attention context rows for the enc-dec family: the
+    per-decoder-layer projected encoder KV ``[L, n_slots, max_ctx, KV,
+    hd]`` plus a per-slot true context length.  Written host-side ONCE at
+    admission (the encoder runs at the true audio length — padding would
+    corrupt a bidirectional encoder), then only read by the jitted steps;
+    never donated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cache_pool import CapacityError, DoubleFree, SlotPoolView
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentStateView:
+    """Lane addressing over a ``RecurrentStatePool``'s state arenas.
+
+    ``states`` is the pool's list of per-layer pytrees (leading dim
+    n_slots).  ``rows`` [B] maps batch lanes to slots (values >= n_slots
+    are padding: their gathers clamp harmlessly, their scatters drop);
+    ``rows=None`` means the batch IS the arena (fused decode).  ``cursor``
+    [B] counts tokens already absorbed into each lane's state — cursor 0
+    marks a fresh lane whose family init state must be selected in-jit.
+    ``n_new`` [B] is how many of the step's S token positions are real per
+    lane; families mask their gates past it so padded/inactive lanes leave
+    their state bit-identical.
+    """
+    states: Any
+    rows: Any | None
+    cursor: Any
+    n_new: Any
+
+    def gather_layer(self, i: int):
+        """Per-lane state pytree for layer ``i`` ([B, ...] leaves)."""
+        st = self.states[i]
+        if self.rows is None:
+            return st
+        return jax.tree.map(lambda a: a[self.rows], st)
+
+    def scatter_layer(self, i: int, new_state):
+        """Layer ``i``'s arena with each lane's new state written back at
+        its slot (padding lanes dropped).  Returns the updated arena
+        pytree; with ``rows=None`` the new state IS the arena."""
+        if self.rows is None:
+            return new_state
+        return jax.tree.map(
+            lambda arena, fresh: arena.at[self.rows].set(
+                fresh.astype(arena.dtype), mode="drop"),
+            self.states[i], new_state)
+
+    def select_fresh(self, lane_state, init_state):
+        """Where a lane's cursor is 0, replace its (stale, previous
+        occupant's) state with the family's init state — the in-jit
+        equivalent of zeroing a slot at alloc time, and a no-op for
+        resumed (swap-restored) lanes whose cursor is > 0."""
+        fresh = self.cursor == 0
+        return jax.tree.map(
+            lambda init, cur: jnp.where(
+                fresh.reshape(fresh.shape + (1,) * (cur.ndim - 1)),
+                init.astype(cur.dtype), cur),
+            init_state, lane_state)
+
+
+class RecurrentStatePool:
+    """Recurrent-state slots behind the ``KVCachePool`` protocol.
+
+    ``init_states(cfg, n_slots)`` (the family's ``init_state``-style hook)
+    allocates the arenas; placement commits each leaf to its
+    recurrent-state sharding (``ServingPlacement.state_shardings``).  The
+    pool's positions bound nothing physical — state is O(1) per request —
+    but ``max_len`` still caps admissible prompt+generation so scheduling
+    invariants (and the shared submit-time capacity check) stay uniform
+    across families.
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int, init_states,
+                 placement=None):
+        from .placement import ServingPlacement
+        pl = placement or ServingPlacement()
+        self.states = pl.place_states(init_states(cfg, n_slots))
+        self.pos = pl.place_replicated(jnp.zeros((n_slots,), jnp.int32))
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._free = list(range(n_slots - 1, -1, -1))   # pop() -> ascending
+
+    # ---------------------------------------------------------------- slots
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def max_request_tokens(self) -> int:
+        return self.max_len
+
+    def alloc(self) -> int | None:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        if slot in self._free:
+            raise DoubleFree(f"release of free slot {slot}")
+        if not 0 <= slot < self.n_slots:
+            raise CapacityError(f"slot {slot} outside pool of {self.n_slots}")
+        self._free.append(slot)
+
+    free = release
+
+    # ---------------------------------------------------------------- views
+    def lane_rows(self, rows: list[int], n_rows_padded: int) -> np.ndarray:
+        out = np.full((n_rows_padded,), self.n_slots, np.int32)
+        out[:len(rows)] = rows
+        return out
+
+    def chunk_end_check(self, cursor: int, lengths: list[int]) -> None:
+        if cursor + max(lengths) > self.max_len:
+            raise CapacityError(
+                f"prefill of {max(lengths)} tokens at offset {cursor} "
+                f"exceeds request capacity {self.max_len}")
+
+    # ------------------------------------------------------------ lifecycle
+    def adopt(self, states) -> None:
+        """Take ownership of a jitted step's output state arenas (inputs
+        were donated, so this is an in-place handoff)."""
+        self.states = states
+
+    def advance_prefill(self, rows: list[int], ends: list[int]) -> None:
+        self.pos = self.pos.at[jnp.asarray(rows)].set(
+            jnp.asarray(ends, jnp.int32))
+
+    def advance_decode(self, active_mask) -> None:
+        self.pos = jnp.where(jnp.asarray(active_mask), self.pos + 1,
+                             self.pos)
+
+    # ----------------------------------------------------- swap preemption
+    def save_slot(self, slot: int):
+        """One slot's state leaves (small device arrays) for swap-out."""
+        return jax.tree.map(lambda a: a[slot], self.states)
+
+    def restore_slot(self, slot: int, saved) -> None:
+        self.states = jax.tree.map(
+            lambda arena, leaf: arena.at[slot].set(leaf.astype(arena.dtype)),
+            self.states, saved)
+
+
+class EncoderContextPool:
+    """Read-only cross-attention context rows for the enc-dec family.
+
+    ``ck``/``cv`` hold the per-decoder-layer projected encoder KV
+    ``[L, n_slots, max_ctx, KV, hd]`` (same shape grammar — and the same
+    head-sharded placement — as a KV arena); ``lens`` is the host-side
+    true context length per slot.  Rows are written once at admission and
+    only read afterwards, so the arenas ride through the jitted steps
+    WITHOUT donation and need no adopt/advance lifecycle.
+    """
+
+    def __init__(self, cfg, n_slots: int, max_ctx: int, placement=None):
+        from .placement import ServingPlacement
+        pl = placement or ServingPlacement()
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        shape = (L, n_slots, max_ctx, KV, hd)
+        self.ck = pl.place_kv(jnp.zeros(shape, cfg.dtype))
+        self.cv = pl.place_kv(jnp.zeros(shape, cfg.dtype))
+        self.lens = np.zeros((n_slots,), np.int32)
+        self.n_slots = n_slots
+        self.max_ctx = max_ctx
+
+    def write(self, slot: int, ck, cv) -> None:
+        """Install one request's projected context ([L, S_enc, KV, hd]) at
+        its true encoder length."""
+        n = ck.shape[1]
+        if n > self.max_ctx:
+            raise CapacityError(
+                f"encoder context of {n} exceeds max_ctx {self.max_ctx}")
+        self.ck = jax.lax.dynamic_update_slice(
+            self.ck, ck[:, None].astype(self.ck.dtype), (0, slot, 0, 0, 0))
+        self.cv = jax.lax.dynamic_update_slice(
+            self.cv, cv[:, None].astype(self.cv.dtype), (0, slot, 0, 0, 0))
+        self.lens[slot] = n
+
+    def save_slot(self, slot: int):
+        return (self.ck[:, slot], self.cv[:, slot], int(self.lens[slot]))
+
+    def restore_slot(self, slot: int, saved) -> None:
+        ck, cv, n = saved
+        self.ck = self.ck.at[:, slot].set(ck.astype(self.ck.dtype))
+        self.cv = self.cv.at[:, slot].set(cv.astype(self.cv.dtype))
+        self.lens[slot] = n
+
+    def lane_lens(self, rows: list[int], n_rows_padded: int) -> np.ndarray:
+        """Per-lane context lengths for a chunk group (padding lanes get 0:
+        their cross-attention output is garbage the engine discards)."""
+        out = np.zeros((n_rows_padded,), np.int32)
+        out[:len(rows)] = self.lens[rows]
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecPoolView(SlotPoolView):
+    """A ``SlotPoolView`` (decoder self-attention KV arenas + lane
+    addressing) extended with the read-only encoder context: per-layer
+    ``ck``/``cv`` arenas and the per-lane true context length [B]."""
+    ck: Any = None
+    cv: Any = None
+    ctx_len: Any = None
+
+    def lane_ctx(self, ck_l, cv_l):
+        """Per-lane [B, max_ctx, KV, hd] context rows for one layer."""
+        if self.rows is None:
+            return ck_l, cv_l
+        return ck_l[self.rows], cv_l[self.rows]
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridPoolView:
+    """One step's view for the hybrid family: a KV pool view
+    (``SlotPoolView`` or ``PagedPoolView``) for the shared-attention
+    applications and a ``RecurrentStateView`` for the mamba layers —
+    mixed freely inside one jitted step.  The two sub-views carry their
+    own ``n_new``: decode steps write KV for every lane (harmless, see
+    cache_pool docstring) but must mask state updates to active lanes,
+    whose recurrence has no overwrite-before-read safety net."""
+    kv: Any
+    state: RecurrentStateView
+
+    @property
+    def cursor(self):
+        return self.state.cursor
