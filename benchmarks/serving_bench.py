@@ -65,9 +65,28 @@ def bench_cfg(args):
     return cfg
 
 
+# one trace buffer + counter registry shared by every engine the bench
+# builds (each engine gets its own ServingTracer / process-id pair), so a
+# --trace-out run lands the whole dense/sparse x slot/paged grid in a
+# single Perfetto file.  None when tracing is off: engines run NULL_TRACER.
+_OBS = {"buffer": None, "registry": None}
+
+
+def _make_tracer(args, name: str):
+    if not getattr(args, "trace_out", None):
+        return None
+    from repro.serving import ServingTracer
+    from repro.runtime.telemetry import MetricsRegistry, TraceBuffer
+    if _OBS["buffer"] is None:
+        _OBS["buffer"] = TraceBuffer()
+        _OBS["registry"] = MetricsRegistry()
+    return ServingTracer(buffer=_OBS["buffer"], registry=_OBS["registry"],
+                         name=name)
+
+
 def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
                   max_len=None, n_blocks=None, token_budget=None,
-                  prefix_caching=True):
+                  prefix_caching=True, trace_name=""):
     from repro.launch.mesh import make_serving_mesh
     return ServingEngine(
         cfg, params, n_slots=n_slots or args.slots,
@@ -75,7 +94,8 @@ def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
         token_budget=token_budget or args.token_budget,
         max_prefill_per_step=args.max_prefill_per_step,
         kv_layout=kv_layout, block_size=args.block_size, n_blocks=n_blocks,
-        prefix_caching=prefix_caching, mesh=make_serving_mesh(args.mesh))
+        prefix_caching=prefix_caching, mesh=make_serving_mesh(args.mesh),
+        tracer=_make_tracer(args, trace_name or kv_layout))
 
 
 def _warm_and_replay(engine, trace, time_scale) -> dict:
@@ -109,7 +129,7 @@ def _warm_and_replay(engine, trace, time_scale) -> dict:
 
 
 def run_one(name: str, cfg, params, trace, args, kv_layout) -> dict:
-    engine = _build_engine(cfg, params, args, kv_layout)
+    engine = _build_engine(cfg, params, args, kv_layout, trace_name=name)
     summary = _warm_and_replay(engine, trace, args.time_scale)
     print(format_summary(name, summary))
     if summary["rejected"]:
@@ -142,7 +162,8 @@ def shared_prefix_scenario(cfg, params, args) -> dict:
     for layout, kw in (("slot", dict(n_slots=slot_slots, max_len=max_len)),
                        ("paged", dict(n_slots=paged_rows, max_len=max_len,
                                       n_blocks=paged_blocks))):
-        engine = _build_engine(cfg, params, args, layout, **kw)
+        engine = _build_engine(cfg, params, args, layout,
+                               trace_name=f"sys/{layout}", **kw)
         summary = _warm_and_replay(engine, trace, args.time_scale)
         print(format_summary(f"sys/{layout}", summary))
         out[layout] = summary
@@ -182,7 +203,8 @@ def long_prompt_scenario(cfg, params, args) -> dict:
         engine = _build_engine(cfg, params, args, "paged",
                                n_slots=args.slots, max_len=max_len,
                                n_blocks=2 * max_len // args.block_size,
-                               token_budget=tb, prefix_caching=False)
+                               token_budget=tb, prefix_caching=False,
+                               trace_name=f"long/{mode}")
         summary = _warm_and_replay(engine, trace, args.time_scale)
         print(format_summary(f"long/{mode}", summary))
         out[mode] = summary
@@ -214,7 +236,8 @@ def mixed_family_scenario(args) -> dict:
             n_requests=max(args.requests // 2, 2), rate_per_s=args.rate,
             vocab=cfg.vocab, prompt_len=(args.prompt_min, args.prompt_max),
             max_new_tokens=args.gen, seed=args.seed + len(pairs))
-        engine = _build_engine(cfg, params, args, "slot")
+        engine = _build_engine(cfg, params, args, "slot",
+                               trace_name=f"mixed/{cfg.family}")
         pairs.append((cfg.family, engine, trace))
 
     for _, engine, trace in pairs:              # warm: compile every shape
@@ -446,6 +469,10 @@ def main(argv=None):
                     help="timed repetitions per --prefill-curve point")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="machine-readable results file ('' to skip)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace_event JSON of all "
+                         "engines here (load in ui.perfetto.dev); a "
+                         "Prometheus counter snapshot lands next to it")
     args = ap.parse_args(argv)
     if args.smoke:
         args.requests = min(args.requests, 10)
@@ -534,9 +561,19 @@ def main(argv=None):
             "mixed_family": mixed_family,
             "prefill_curve": prefill_curve,
         }
+        if _OBS["registry"] is not None:
+            payload["counters"] = _OBS["registry"].snapshot()
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {args.out}")
+
+    if args.trace_out and _OBS["buffer"] is not None:
+        _OBS["buffer"].write(args.trace_out)
+        counters = args.trace_out + ".counters.txt"
+        with open(counters, "w") as f:
+            f.write(_OBS["registry"].prometheus_text())
+        print(f"wrote {args.trace_out} (load in ui.perfetto.dev) "
+              f"and {counters}")
     return results
 
 

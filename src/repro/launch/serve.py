@@ -35,6 +35,12 @@ head, explicit shardings on every jitted step.  Token-identical to the
 single-device engine.  On CPU, force host devices first:
 XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
+``--trace-out trace.json`` turns on the observability substrate
+(serving/observe.py): a Chrome/Perfetto ``trace_event`` JSON of every
+request lifecycle, engine step, jitted call and preemption (load the file
+in ui.perfetto.dev), plus a Prometheus counter snapshot written next to
+it.  Without the flag the engine runs with the no-op NULL_TRACER.
+
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch llama-paper-smoke \
       --batch 4 --prompt-len 32 --gen 16 --sparse
@@ -120,12 +126,35 @@ def _engine_kwargs(args) -> dict:
                 prefix_caching=not args.no_prefix_cache, mesh=mesh)
 
 
+def _make_tracer(args):
+    """A ServingTracer when --trace-out was given, else None (the engine
+    then runs with NULL_TRACER: zero observability cost)."""
+    if not getattr(args, "trace_out", None):
+        return None
+    from ..serving import ServingTracer
+    return ServingTracer()
+
+
+def _write_observability(tracer, args) -> None:
+    """Write the Perfetto trace and the Prometheus counter snapshot next
+    to it (<trace-out> and <trace-out>.counters.txt)."""
+    if tracer is None:
+        return
+    tracer.write_trace(args.trace_out)
+    counters = args.trace_out + ".counters.txt"
+    with open(counters, "w") as f:
+        f.write(tracer.counters_text())
+    print(f"trace written to {args.trace_out} (load in ui.perfetto.dev); "
+          f"counters in {counters}")
+
+
 def run_engine(cfg, params, key, args, quiet: bool = False):
     """Continuous-batching engine on a batch of random prompts."""
     from ..serving import SamplingParams, ServingEngine
+    tracer = _make_tracer(args)
     engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen,
-                           **_engine_kwargs(args))
+                           tracer=tracer, **_engine_kwargs(args))
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
     # enc-dec requests carry their encoder features (same draw as the
     # one-shot loop, so --legacy parity compares like against like)
@@ -147,6 +176,7 @@ def run_engine(cfg, params, key, args, quiet: bool = False):
               f"{engine.n_steps} steps, {args.slots} slots)")
         if args.kv_layout == "paged":
             print(f"  paged: {engine.stats()['pool']}")
+    _write_observability(tracer, args)
     return jnp.asarray([r.tokens for r in reqs], jnp.int32)
 
 
@@ -154,14 +184,16 @@ def run_trace(cfg, params, args):
     """Replay a recorded request trace through the engine."""
     from ..runtime.metrics import format_summary, summarize
     from ..serving import ServingEngine, load_trace, replay
+    tracer = _make_tracer(args)
     engine = ServingEngine(cfg, params, max_len=args.max_len,
-                           **_engine_kwargs(args))
+                           tracer=tracer, **_engine_kwargs(args))
     trace = load_trace(args.trace)
     res = replay(engine, trace, time_scale=args.time_scale)
     summary = summarize([r.metrics for r in res["finished"]], res["wall_s"])
     print(format_summary("trace", summary))
     if res["rejected"]:
         print(f"rejected by admission control: {res['rejected']}")
+    _write_observability(tracer, args)
     return res
 
 
@@ -212,6 +244,10 @@ def main(argv=None):
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="compress (<1) / stretch (>1) trace arrival gaps")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "run here (load in ui.perfetto.dev); a Prometheus "
+                         "counter snapshot lands next to it")
     args = ap.parse_args(argv)
 
     from ..serving import SUPPORTED_FAMILIES

@@ -32,6 +32,12 @@ class RequestMetrics:
     # chunked-prefill trail: prefill calls this request's prompt (plus any
     # re-prefilled history after a preemption) was split into
     prefill_chunks: int = 0
+    # scheduler interventions: how many times this request was preempted
+    # back to the queue, and why the LAST preemption/eviction happened
+    # ("" = never preempted) — the paged pool's aggregate count can't
+    # distinguish one thrashing request from many lightly-touched ones
+    n_preemptions: int = 0
+    last_preempt_reason: str = ""
     # every observed gap between consecutive generated tokens — includes
     # engine stalls (a long prefill sharing the step, preemption waits),
     # which is exactly what the decode-tail p99 must capture
@@ -67,9 +73,18 @@ def percentiles(values, ps=(50, 99)) -> dict[str, float]:
 
 
 def histogram(values) -> dict[str, int]:
-    """Exact counts keyed by value (chunk counts are small integers)."""
-    return {str(v): c
-            for v, c in collections.Counter(int(x) for x in values).items()}
+    """Exact counts keyed by value (chunk counts are small integers).
+    Keys are sorted numerically so serialized histograms are diff-stable
+    across runs regardless of first-occurrence order."""
+    counts = collections.Counter(int(x) for x in values)
+    return {str(v): counts[v] for v in sorted(counts)}
+
+
+def histogram_str(values) -> dict[str, int]:
+    """Exact counts for string-valued categories (preemption reasons),
+    keys sorted lexically for diff stability."""
+    counts = collections.Counter(values)
+    return {k: counts[k] for k in sorted(counts)}
 
 
 def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
@@ -93,6 +108,16 @@ def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
             "max": int(max(chunks, default=0)),
             "hist": histogram(chunks),
         },
+        "preemptions": {
+            "total": sum(m.n_preemptions for m in done),
+            "n_requests_preempted": sum(
+                1 for m in done if m.n_preemptions > 0),
+            "max_per_request": max(
+                (m.n_preemptions for m in done), default=0),
+            "by_reason": histogram_str(
+                m.last_preempt_reason for m in done
+                if m.last_preempt_reason),
+        },
     }
     families = sorted({m.family for m in done if m.family})
     if len(families) > 1 or (families and families != [""]):
@@ -115,15 +140,32 @@ def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
 
 
 def format_summary(name: str, s: dict) -> str:
+    tps = s["tok_per_s"]
     line = (f"{name:>8}: {s['n_requests']} req, {s['total_tokens']} tok "
-            f"in {s['wall_s']:.2f}s = {s['tok_per_s']:.1f} tok/s | "
-            f"ttft p50 {s['ttft']['p50']*1e3:.0f}ms p99 {s['ttft']['p99']*1e3:.0f}ms | "
-            f"tpot p50 {s['tpot']['p50']*1e3:.1f}ms p99 {s['tpot']['p99']*1e3:.1f}ms | "
-            f"e2e p50 {s['e2e']['p50']*1e3:.0f}ms p99 {s['e2e']['p99']*1e3:.0f}ms")
+            f"in {s['wall_s']:.2f}s"
+            + (f" = {tps:.1f} tok/s" if not math.isnan(tps) else ""))
+    # ttft/tpot are NaN when no (multi-token) request finished in the
+    # window — skip the segment rather than printing "nanms", same guard
+    # itl has always had
+    ttft = s.get("ttft", {})
+    if ttft and not math.isnan(ttft.get("p99", math.nan)):
+        line += (f" | ttft p50 {ttft['p50']*1e3:.0f}ms "
+                 f"p99 {ttft['p99']*1e3:.0f}ms")
+    tpot = s.get("tpot", {})
+    if tpot and not math.isnan(tpot.get("p99", math.nan)):
+        line += (f" | tpot p50 {tpot['p50']*1e3:.1f}ms "
+                 f"p99 {tpot['p99']*1e3:.1f}ms")
+    e2e = s.get("e2e", {})
+    if e2e and not math.isnan(e2e.get("p99", math.nan)):
+        line += (f" | e2e p50 {e2e['p50']*1e3:.0f}ms "
+                 f"p99 {e2e['p99']*1e3:.0f}ms")
     itl = s.get("itl", {})
     if itl and not math.isnan(itl.get("p99", math.nan)):
         line += f" | itl p99 {itl['p99']*1e3:.1f}ms"
     ch = s.get("prefill_chunks", {})
     if ch.get("max", 0) > 1:
         line += f" | chunks max {ch['max']}"
+    pre = s.get("preemptions", {})
+    if pre.get("total", 0) > 0:
+        line += f" | preempt {pre['total']}"
     return line

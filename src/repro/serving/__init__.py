@@ -18,6 +18,12 @@ layer (serving/placement.py) — token-identical to the single-device path.
 
 Dense params and SparseWeight compressed params (the paper's 8:16 +
 structured-outlier deployment) are served by the same engine.
+
+``tracer=ServingTracer()`` turns on the observability substrate
+(serving/observe.py): Perfetto trace spans for every request lifecycle and
+engine step, a Prometheus-text counter registry, and per-jitted-variant
+step-time attribution.  The default NULL_TRACER is a no-op with zero
+per-step cost.
 """
 
 from .cache_pool import (CachePoolError, CapacityError, DoubleFree,
@@ -25,12 +31,15 @@ from .cache_pool import (CachePoolError, CapacityError, DoubleFree,
 from .engine import KV_LAYOUTS, ServingEngine, SUPPORTED_FAMILIES
 from .families import (EncDecAdapter, FamilyAdapter, HybridAdapter,
                        RecurrentAdapter, TransformerAdapter, build_adapter)
+from .observe import NULL_TRACER, NullTracer, ServingTracer
 from .paged import OutOfBlocks, PagedKVPool, PagedPoolView
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .state_pool import (EncDecPoolView, EncoderContextPool, HybridPoolView,
                          RecurrentStatePool, RecurrentStateView)
-from .scheduler import (CHUNK_QUANTUM, QueueFull, RequestQueue, plan_chunks,
-                        resolve_token_budget, validate_token_budget)
+from .scheduler import (CHUNK_QUANTUM, PREEMPT_DECODE_PRESSURE,
+                        PREEMPT_PREFILL_PRESSURE, QueueFull, RequestQueue,
+                        plan_chunks, resolve_token_budget,
+                        validate_token_budget)
 from .trace import (TraceRequest, load_trace, long_prompt_trace,
                     poisson_trace, replay, save_trace)

@@ -175,6 +175,12 @@ class SlotKVPool:
     # kept for existing callers; same semantics as release
     free = release
 
+    def stats(self) -> dict:
+        """Occupancy snapshot, shape-compatible with PagedKVPool.stats()
+        so benchmarks and the tracer's gauges read one surface."""
+        return {"layout": "slot", "n_slots": self.n_slots,
+                "n_free": self.n_free, "max_len": self.max_len}
+
     # ---------------------------------------------------------------- views
     def lane_rows(self, rows: list[int], n_rows_padded: int) -> np.ndarray:
         """Host lane->slot map for a chunk group; padding lanes point past

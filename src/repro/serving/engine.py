@@ -113,11 +113,13 @@ import numpy as np
 
 from . import families
 from .cache_pool import CachePoolError
+from .observe import NULL_TRACER
 from .paged import OutOfBlocks
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
 from .sampling import sample_tokens
-from .scheduler import (CHUNK_QUANTUM, QueueFull, RequestQueue,
+from .scheduler import (CHUNK_QUANTUM, PREEMPT_DECODE_PRESSURE,
+                        PREEMPT_PREFILL_PRESSURE, QueueFull, RequestQueue,
                         pick_preemption_victim, plan_chunks,
                         resolve_token_budget)
 
@@ -141,7 +143,8 @@ class ServingEngine:
                  block_size: int = 16, n_blocks: int | None = None,
                  prefix_caching: bool = True, lookahead_blocks: int = 1,
                  paged_attn_backend: str | None = None, mesh=None,
-                 max_ctx: int | None = None, clock=time.monotonic):
+                 max_ctx: int | None = None, clock=time.monotonic,
+                 tracer=None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServingEngine supports {SUPPORTED_FAMILIES} families, not "
@@ -190,6 +193,13 @@ class ServingEngine:
         self.running: dict[int, Request] = {}        # slot/row -> request
         self.finished: list[Request] = []
         self._clock = clock
+        # observability: NULL_TRACER is a no-op singleton and every hot-path
+        # call site is guarded by ``tracer.enabled``, so the disabled engine
+        # does zero observability work per step (serving/observe.py)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        if self.tracer.enabled:
+            self.tracer.attach(self)
+            self.adapter.tracer = self.tracer
         self._next_id = 0
         self.n_steps = 0
         self.n_preemptions = 0
@@ -235,6 +245,8 @@ class ServingEngine:
         req.metrics.arrival = self._clock()
         if not self.queue.try_push(req):
             raise QueueFull(f"queue at capacity ({self.queue.max_size})")
+        if self.tracer.enabled:
+            self.tracer.on_submit(req)
         return req
 
     # ------------------------------------------------------------ stepping
@@ -247,6 +259,9 @@ class ServingEngine:
         budget (in-flight cursors first, then admissions) -> fused decode
         of every prefill-complete request."""
         now = self._clock()
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin_step(self.n_steps, now)
         stats = {"evicted": 0, "admitted": 0, "finished": 0, "decoded": 0,
                  "preempted": 0, "prefill_tokens": 0, "prefill_chunks": 0}
 
@@ -254,6 +269,8 @@ class ServingEngine:
             req._finish(Status.EVICTED, now)
             self.finished.append(req)
             stats["evicted"] += 1
+            if tr.enabled:
+                tr.on_evict(req)
 
         self._prefill_phase(stats, now)
 
@@ -262,6 +279,8 @@ class ServingEngine:
             stats["finished"] += self._decode_once(stats)
 
         self.n_steps += 1
+        if tr.enabled:
+            tr.end_step(self, stats)
         return stats
 
     def run(self, max_steps: int | None = None) -> list[Request]:
@@ -280,8 +299,9 @@ class ServingEngine:
                "kv_layout": self.kv_layout,
                "token_budget": self.token_budget,
                "placement": self.placement.describe()}
-        if self.kv_layout == "paged":
-            out["pool"] = self.pool.stats()
+        pool_stats = getattr(self.pool, "stats", None)
+        if pool_stats is not None:
+            out["pool"] = pool_stats()
         return out
 
     def reset_stats(self) -> None:
@@ -317,6 +337,9 @@ class ServingEngine:
         """Spend up to ``token_budget`` prompt tokens: advance in-flight
         prefill cursors first (admission order), then admit new requests
         from the queue head, FIFO, with layout-aware placement."""
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin_phase("plan")
         in_flight = sorted(
             (r for r in self.running.values()
              if r.status is Status.PREFILLING),
@@ -326,9 +349,11 @@ class ServingEngine:
 
         def try_admit(req, chunk):
             seq = self._seq(req)
+            cache_lookup = False
             if self.kv_layout == "paged":
                 if not self.pool.can_admit(chunk, self.lookahead_blocks):
                     return None
+                cache_lookup = self.pool.prefix_cache is not None
                 try:
                     row, n_cached = self.pool.admit(seq, alloc_tokens=0)
                 except OutOfBlocks:
@@ -348,6 +373,8 @@ class ServingEngine:
             if popped is not req:
                 raise CachePoolError("queue head changed during planning")
             self._install_running(req, row, now)
+            if tr.enabled:
+                tr.on_admit(req, n_cached, cache_lookup)
             # family admission work: swap-restore (stateful slot layouts
             # resume with their saved state/KV/context and cursor), or the
             # enc-dec encoder run — may raise past n_cached
@@ -372,6 +399,8 @@ class ServingEngine:
         for req, take in runnable:
             by_shape.setdefault((req.prefill_cursor, _bucket(take)),
                                 []).append((req, take))
+        if tr.enabled:
+            tr.end_phase(planned=len(runnable))
         for (cursor, bucket), group in sorted(by_shape.items()):
             # a LATER plan entry's capacity loop may have preempted a
             # request after it was validated into runnable (its slot is
@@ -380,8 +409,14 @@ class ServingEngine:
                      if self.running.get(r.slot) is r
                      and r.prefill_cursor == cursor]
             if group:
+                if tr.enabled:
+                    tr.begin_phase("chunk", cursor=cursor, bucket=bucket,
+                                   n_rows=len(group),
+                                   tokens=sum(t for _, t in group))
                 stats["finished"] += self._run_chunk_group(group, cursor,
                                                            bucket, stats)
+                if tr.enabled:
+                    tr.end_phase()
 
     def _ensure_chunk_capacity(self, req: Request, take: int,
                                stats: dict) -> bool:
@@ -406,7 +441,8 @@ class ServingEngine:
                     # accounting bug, not workload pressure
                     raise CachePoolError(
                         "sole prefilling request cannot grow its KV")
-                self._preempt_one(stats, exclude=req)
+                self._preempt_one(stats, exclude=req,
+                                  reason=PREEMPT_PREFILL_PRESSURE)
 
     def _install_running(self, req: Request, slot: int, now: float) -> None:
         req.slot = slot
@@ -452,14 +488,19 @@ class ServingEngine:
         stats["prefill_tokens"] += sum(takes)
         stats["prefill_chunks"] += n
 
+        tr = self.tracer
         done_idx, done_rows, done_last = [], [], []
         for i, ((req, take), seq) in enumerate(zip(group, seqs)):
             req.prefill_cursor = cursor + take
             req.metrics.prefill_chunks += 1
+            if tr.enabled:
+                tr.on_chunk(req, cursor, take)
             if req.prefill_cursor == len(seq):
                 req.status = Status.RUNNING
                 if self.kv_layout == "paged":
                     self.pool.register_prefix(req.slot, seq)
+                if tr.enabled:
+                    tr.on_prefill_complete(req)
                 done_idx.append(i)
                 done_rows.append(req.slot)
                 done_last.append(take - 1)
@@ -471,7 +512,8 @@ class ServingEngine:
         return self._emit_tokens(done_rows)
 
     # -------------------------------------------------------------- decode
-    def _preempt_one(self, stats: dict, exclude: Request | None = None) -> None:
+    def _preempt_one(self, stats: dict, exclude: Request | None = None,
+                     reason: str = PREEMPT_DECODE_PRESSURE) -> None:
         """Push the youngest running request (never ``exclude``) back to
         the queue head and release its blocks — after publishing its
         fully-written blocks to the prefix cache, so the resume restarts
@@ -495,11 +537,15 @@ class ServingEngine:
         req.status = Status.QUEUED
         req.prefill_cursor = 0
         req.n_preempted += 1
+        req.metrics.n_preemptions += 1
+        req.metrics.last_preempt_reason = reason
         self.queue.push_front(req)
         self.n_preemptions += 1
         if self.kv_layout == "paged":
             self.pool.n_preemptions += 1
         stats["preempted"] += 1
+        if self.tracer.enabled:
+            self.tracer.on_preempt(req, reason)
 
     def _decode_rows(self) -> list[int]:
         return sorted(s for s, r in self.running.items()
@@ -513,6 +559,7 @@ class ServingEngine:
         token — see cache_pool/pool docstrings for why the stray write is
         harmless)."""
         stats = stats if stats is not None else {"preempted": 0}
+        tr = self.tracer
         active = self._decode_rows()
         if self.kv_layout == "paged":
             while True:
@@ -526,11 +573,13 @@ class ServingEngine:
                         # an accounting bug, not workload pressure
                         raise CachePoolError(
                             "sole running request cannot grow its KV")
-                    self._preempt_one(stats)
+                    self._preempt_one(stats, reason=PREEMPT_DECODE_PRESSURE)
                     active = self._decode_rows()
             if not active:
                 return 0
         stats["decoded"] = len(active)
+        if tr.enabled:
+            tr.begin_phase("decode", n_active=len(active))
         tokens = jnp.asarray(self._last_token[:, None])
         logits = self.adapter.step_decode(tokens, active)
         self._slot_logits = logits[:, 0].astype(jnp.float32)
@@ -538,11 +587,16 @@ class ServingEngine:
         advanced = np.zeros((self.pool.n_slots,), bool)
         advanced[[s for s in active if s in self.running]] = True
         self.pool.advance_decode(advanced)
+        if tr.enabled:
+            tr.end_phase(finished=n_finished)
         return n_finished
 
     def _emit_tokens(self, slots: list[int]) -> int:
         """Sample one token for ``slots`` from _slot_logits, stream it, and
         retire requests that hit max_new_tokens / EOS.  Returns retirements."""
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin_phase("emit", n_rows=len(slots))
         toks = np.asarray(sample_tokens(
             self._slot_logits, jnp.asarray(self._temps),
             jnp.asarray(self._topks), jnp.asarray(self._seeds),
@@ -563,4 +617,8 @@ class ServingEngine:
                 del self.running[slot]
                 self.pool.release(slot)
                 n_finished += 1
+                if tr.enabled:
+                    tr.on_finish(req)
+        if tr.enabled:
+            tr.end_phase(finished=n_finished)
         return n_finished

@@ -66,6 +66,13 @@ class BlockPool:
     def n_free(self) -> int:
         return len(self._free)
 
+    def occupancy(self) -> dict:
+        """Arena occupancy snapshot for gauges/benchmarks: allocated vs
+        free blocks plus how many cache-held blocks are evictable."""
+        return {"n_blocks": self.n_blocks, "n_free": self.n_free,
+                "n_allocated": self.n_blocks - self.n_free,
+                "n_cached_idle": self.n_cached_idle}
+
     def alloc(self) -> int:
         """Hand out a free block with refcount 1."""
         if not self._free:

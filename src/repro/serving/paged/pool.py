@@ -354,8 +354,10 @@ class PagedKVPool:
         self._free_rows.append(row)
 
     def stats(self) -> dict:
-        out = {"n_blocks": self.n_blocks, "block_size": self.block_size,
+        out = {"layout": "paged", "n_blocks": self.n_blocks,
+               "block_size": self.block_size,
                "free_blocks": self.blocks.n_free,
+               "occupancy": self.blocks.occupancy(),
                "n_preemptions": self.n_preemptions}
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()

@@ -36,6 +36,7 @@ class PrefixCache:
         self._key_of_block: dict[int, object] = {}
         # accounting for the benchmark / tests
         self.lookups = 0
+        self.hits = 0                   # lookups matching >= 1 block
         self.hit_tokens = 0
         self.inserted_blocks = 0
         self.evicted_blocks = 0
@@ -74,6 +75,8 @@ class PrefixCache:
             self._entries.move_to_end(key)   # parents most-recent last
         for b in matched:
             self._pool.incref(b)
+        if matched:
+            self.hits += 1
         self.hit_tokens += len(matched) * self._pool.block_size
         return matched
 
@@ -121,7 +124,9 @@ class PrefixCache:
         return False
 
     def stats(self) -> dict:
-        return {"lookups": self.lookups, "hit_tokens": self.hit_tokens,
+        return {"lookups": self.lookups, "hits": self.hits,
+                "hit_rate": self.hits / self.lookups if self.lookups else 0.0,
+                "hit_tokens": self.hit_tokens,
                 "entries": len(self._entries),
                 "inserted_blocks": self.inserted_blocks,
                 "evicted_blocks": self.evicted_blocks}
@@ -129,5 +134,5 @@ class PrefixCache:
     def reset_stats(self) -> None:
         """Zero the counters without touching cached content (so a warmed
         cache can be measured over exactly one benchmark window)."""
-        self.lookups = self.hit_tokens = 0
+        self.lookups = self.hits = self.hit_tokens = 0
         self.inserted_blocks = self.evicted_blocks = 0

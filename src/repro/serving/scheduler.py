@@ -52,6 +52,12 @@ from .request import Request, Status
 # except a sequence's final chunk — bounds the compiled shape ladder
 CHUNK_QUANTUM = 8
 
+# preemption reasons, recorded on RequestMetrics and as counter labels:
+# decode pressure = the arena ran dry growing a decode step; prefill
+# pressure = an in-flight chunk could not get blocks for its next cursor
+PREEMPT_DECODE_PRESSURE = "decode_pressure"
+PREEMPT_PREFILL_PRESSURE = "prefill_pressure"
+
 
 class QueueFull(RuntimeError):
     """Raised by ServingEngine.submit when admission control rejects."""

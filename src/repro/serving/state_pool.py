@@ -143,6 +143,11 @@ class RecurrentStatePool:
 
     free = release
 
+    def stats(self) -> dict:
+        """Occupancy snapshot, same shape as SlotKVPool.stats()."""
+        return {"layout": "state", "n_slots": self.n_slots,
+                "n_free": self.n_free, "max_len": self.max_len}
+
     # ---------------------------------------------------------------- views
     def lane_rows(self, rows: list[int], n_rows_padded: int) -> np.ndarray:
         out = np.full((n_rows_padded,), self.n_slots, np.int32)

@@ -1,0 +1,395 @@
+"""Observability substrate tests.
+
+Two load-bearing properties:
+
+1. Disabled is free AND invisible: the default engine holds the
+   NULL_TRACER singleton, whose hooks return shared objects (no per-step
+   allocation), and a traced run emits exactly the same tokens as an
+   untraced one — for slot+paged layouts, dense+8:16-sparse params.
+2. The trace IS the metrics: every request's "request_summary" event in
+   the written Perfetto trace restates its ``RequestMetrics`` exactly —
+   including preemption/resume and prefix-cache-hit lifecycles.
+"""
+import dataclasses
+import json
+import math
+
+import jax
+import pytest
+
+from repro import configs
+from repro.core import SparsifyConfig
+from repro.models import get_model
+from repro.runtime.metrics import (RequestMetrics, format_summary, histogram,
+                                   histogram_str, percentiles, summarize)
+from repro.runtime.telemetry import (Counter, MetricsRegistry, TraceBuffer,
+                                     validate_trace_events)
+from repro.serving import (NULL_TRACER, NullTracer, SamplingParams,
+                           ServingEngine, ServingTracer, Status)
+from repro.serving.observe import NULL_SPAN
+
+CFG = dataclasses.replace(configs.get_smoke("llama-paper"),
+                          name="observe-test", n_layers=2, d_model=128,
+                          n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256,
+                          vocab=512, remat=False)
+GEN = 6
+
+
+@pytest.fixture(scope="module")
+def dense_params():
+    return get_model(CFG).init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def sparse_params(dense_params):
+    from repro.models.sparse_serving import sparsify_for_serving
+    scfg = SparsifyConfig(weight_pattern="8:16", outlier_pattern="16:256",
+                          scorer="magnitude", use_smoothquant=False)
+    sp, report = sparsify_for_serving(dense_params, scfg)
+    assert report["n_layers_sparsified"] > 0
+    return sp
+
+
+def _prompts(n, length, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return [t.tolist() for t in
+            jax.random.randint(key, (n, length), 0, CFG.vocab)]
+
+
+def _run(params, prompts, gen, tracer=None, **kw):
+    engine = ServingEngine(CFG, params, tracer=tracer, **kw)
+    reqs = [engine.submit(p, SamplingParams(max_new_tokens=gen))
+            for p in prompts]
+    engine.run()
+    return engine, reqs
+
+
+def _summaries(tracer):
+    """{request_id: args} of every request_summary event in the buffer."""
+    return {e["args"]["id"]: e["args"] for e in tracer.buffer.events
+            if e.get("name") == "request_summary"}
+
+
+def _check_lifecycle_agreement(tracer, reqs):
+    """The acceptance property: trace events reconstruct each request's
+    lifecycle in exact agreement with its RequestMetrics."""
+    summaries = _summaries(tracer)
+    for r in reqs:
+        m = r.metrics
+        s = summaries[r.request_id]
+        assert s["status"] == r.status.value
+        assert s["admitted"] == m.admitted
+        assert s["first_token"] == m.first_token
+        assert s["finished"] == m.finished
+        assert s["n_tokens"] == m.n_tokens == len(r.tokens)
+        assert s["prefill_chunks"] == m.prefill_chunks
+        assert s["n_preemptions"] == m.n_preemptions
+        assert s["last_preempt_reason"] == m.last_preempt_reason
+
+
+# --------------------------------------------------------------------------
+# disabled tracing: free, and invisible in the token stream
+# --------------------------------------------------------------------------
+
+def test_null_tracer_is_default_and_allocation_free(dense_params):
+    engine = ServingEngine(CFG, dense_params, n_slots=2, max_len=32)
+    assert engine.tracer is NULL_TRACER
+    assert engine.adapter.tracer is NULL_TRACER
+    # every hook returns a shared singleton or None — nothing per call
+    t = NullTracer()
+    assert t.enabled is False
+    assert t.begin_step(3, 0.0) is NULL_SPAN
+    assert t.begin_phase("plan", tokens=7) is NULL_SPAN
+    assert t.attach(engine) is t
+    for hook in (t.end_step, t.end_phase, t.instant, t.on_submit,
+                 t.on_admit, t.on_chunk, t.on_prefill_complete,
+                 t.on_preempt, t.on_finish, t.on_evict):
+        pass  # existence; no-arg-shape enforcement below via real run
+    assert t.end_phase() is None
+    assert t.instant("x", a=1) is None
+    # jit_call is a bare passthrough
+    assert t.jit_call("step", lambda a, b: a + b, (2, 3)) == 5
+    with NULL_SPAN:
+        pass  # usable as an inert context manager
+
+
+@pytest.mark.parametrize("which", ["dense", "sparse"])
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+def test_traced_tokens_identical_and_trace_agrees(which, layout, tmp_path,
+                                                  dense_params,
+                                                  sparse_params):
+    params = dense_params if which == "dense" else sparse_params
+    prompts = _prompts(3, 16)
+    kw = dict(n_slots=3, max_len=32, kv_layout=layout)
+    _, ref = _run(params, prompts, GEN, tracer=None, **kw)
+    tracer = ServingTracer()
+    engine, reqs = _run(params, prompts, GEN, tracer=tracer, **kw)
+    assert engine.tracer is tracer
+    for rr, r in zip(ref, reqs):
+        assert r.status is Status.FINISHED
+        assert r.tokens == rr.tokens, "tracing changed the token stream"
+    _check_lifecycle_agreement(tracer, reqs)
+    # the written file is valid trace_event JSON with the span inventory
+    path = tmp_path / "trace.json"
+    tracer.write_trace(str(path))
+    events = validate_trace_events(json.loads(path.read_text()))
+    names = {e["name"] for e in events}
+    assert {"step", "plan", "decode", "emit", "queued", "prefill",
+            "request_summary"} <= names
+    # per-step spans live in the engine process, lifecycles in requests
+    assert any(e["pid"] == tracer._pid_engine for e in events)
+    assert any(e["pid"] == tracer._pid_requests for e in events)
+
+
+def test_preemption_lifecycle_in_trace(dense_params):
+    """A starved paged arena forces preempt-to-queue; the trace carries the
+    preemption instants and the summaries agree with RequestMetrics."""
+    prompts = _prompts(4, 16, seed=9)
+    tracer = ServingTracer()
+    engine, reqs = _run(dense_params, prompts, 12, tracer=tracer,
+                        n_slots=4, max_len=40, kv_layout="paged",
+                        block_size=8, n_blocks=10, prefix_caching=False)
+    assert engine.n_preemptions > 0
+    assert all(r.status is Status.FINISHED for r in reqs)
+    _check_lifecycle_agreement(tracer, reqs)
+    summaries = _summaries(tracer)
+    preempted = [r for r in reqs if r.metrics.n_preemptions > 0]
+    assert preempted
+    for r in preempted:
+        assert summaries[r.request_id]["last_preempt_reason"] != ""
+    # victim instants on both the engine track and the request track
+    ev_names = [(e["name"], e.get("cat")) for e in tracer.buffer.events]
+    assert ("preempt", "engine") in ev_names
+    assert ("preempted", "request") in ev_names
+    # counter: every engine-counted preemption is attributed to a reason
+    reg = tracer.registry.snapshot()
+    total = sum(reg["serving_preemptions_total"].values())
+    assert total == engine.n_preemptions
+
+
+def test_prefix_cache_hit_lifecycle(dense_params):
+    """Second submission of the same prompt hits the prefix cache; the
+    trace records the lookup, the matched depth, and the summary's
+    cached_tokens."""
+    prompt = _prompts(1, 16, seed=3)[0]
+    tracer = ServingTracer()
+    engine = ServingEngine(CFG, dense_params, n_slots=2, max_len=40,
+                           kv_layout="paged", block_size=8, n_blocks=16,
+                           prefix_caching=True, tracer=tracer)
+    r1 = engine.submit(prompt, SamplingParams(max_new_tokens=GEN))
+    engine.run()
+    r2 = engine.submit(prompt, SamplingParams(max_new_tokens=GEN))
+    engine.run()
+    assert r1.tokens == r2.tokens
+    _check_lifecycle_agreement(tracer, [r1, r2])
+    summaries = _summaries(tracer)
+    assert summaries[r1.request_id]["cached_tokens"] == 0
+    assert summaries[r2.request_id]["cached_tokens"] > 0
+    reg = tracer.registry
+    assert reg.counter("serving_prefix_cache_lookups_total").get(
+        engine=tracer.name, family="dense") == 2
+    assert reg.counter("serving_prefix_cache_hits_total").get(
+        engine=tracer.name, family="dense") == 1
+    assert reg.counter("serving_prefix_cache_hit_tokens_total").get(
+        engine=tracer.name, family="dense") == \
+        summaries[r2.request_id]["cached_tokens"]
+    hits = [e for e in tracer.buffer.events
+            if e.get("name") == "prefix_cache" and e["args"]["hit"]]
+    assert len(hits) == 1
+
+
+def test_counters_and_attribution(dense_params):
+    prompts = _prompts(3, 16)
+    tracer = ServingTracer()
+    engine, reqs = _run(dense_params, prompts, GEN, tracer=tracer,
+                        n_slots=3, max_len=32)
+    lb = dict(engine=tracer.name, family="dense")
+    reg = tracer.registry
+    assert reg.counter("serving_tokens_decoded_total").get(**lb) == \
+        sum(len(r.tokens) for r in reqs)
+    assert reg.counter("serving_tokens_prefilled_total").get(**lb) == \
+        sum(len(p) for p in prompts)
+    assert reg.counter("serving_requests_finished_total").get(
+        status="finished", **lb) == len(reqs)
+    assert reg.counter("serving_steps_total").get(**lb) == engine.n_steps
+    # jit attribution: at least the prefill-step and decode variants, each
+    # wall-clocked; compiles counted once per variant
+    attr = tracer.attribution()
+    kinds = {v["kind"] for v in attr.values()}
+    assert {"step", "decode"} <= kinds
+    for v in attr.values():
+        assert v["calls"] > 0 and v["total_s"] > 0
+        assert "flops" in v and "bytes_accessed" in v
+    n_variants = len(attr)
+    compiles = sum(reg.counter("serving_jit_compiles_total")
+                   .series().values())
+    retraces = sum(reg.counter("serving_jit_retraces_total")
+                   .series().values())
+    assert compiles + retraces == n_variants
+    # prometheus text renders every family with HELP/TYPE headers
+    text = tracer.counters_text()
+    assert "# TYPE serving_tokens_decoded_total counter" in text
+    assert f'engine="{tracer.name}"' in text
+
+
+def test_shared_buffer_multi_engine(dense_params):
+    """Two engines share one buffer+registry: disjoint pid pairs, distinct
+    engine labels (dense and sparse engines share family=dense)."""
+    buf, reg = TraceBuffer(), MetricsRegistry()
+    prompts = _prompts(2, 8, seed=5)
+    t1 = ServingTracer(buffer=buf, registry=reg, name="a/slot")
+    t2 = ServingTracer(buffer=buf, registry=reg, name="b/paged")
+    _run(dense_params, prompts, 4, tracer=t1, n_slots=2, max_len=16)
+    _run(dense_params, prompts, 4, tracer=t2, n_slots=2, max_len=16,
+         kv_layout="paged", block_size=8, n_blocks=8)
+    assert {t1._pid_engine, t1._pid_requests}.isdisjoint(
+        {t2._pid_engine, t2._pid_requests})
+    decoded = reg.counter("serving_tokens_decoded_total")
+    assert decoded.get(engine="a/slot", family="dense") == 8
+    assert decoded.get(engine="b/paged", family="dense") == 8
+    events = validate_trace_events(buf.to_json())
+    assert {e["pid"] for e in events} >= {t1._pid_engine, t2._pid_engine}
+
+
+# --------------------------------------------------------------------------
+# telemetry primitives
+# --------------------------------------------------------------------------
+
+def test_counter_monotonic_and_labels():
+    c = Counter("c_total")
+    c.inc()
+    c.inc(2, family="x")
+    assert c.get() == 1 and c.get(family="x") == 2
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_registry_kind_collision_and_reuse():
+    reg = MetricsRegistry()
+    c = reg.counter("n_total", "help")
+    assert reg.counter("n_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("n_total")
+    g = reg.gauge("depth")
+    g.set(3, q="a")
+    g.set(1, q="a")
+    assert g.get(q="a") == 1           # gauges are last-write
+    snap = reg.snapshot()
+    assert snap["n_total"] == {"": 0.0} or snap["n_total"] == {}
+    text = reg.prometheus_text()
+    assert "# TYPE n_total counter" in text
+    assert 'depth{q="a"} 1' in text
+
+
+def test_trace_buffer_dedup_and_clamp():
+    buf = TraceBuffer()
+    buf.set_process_name(1, "p")
+    buf.set_process_name(1, "p again")    # deduped
+    buf.set_thread_name(1, 2, "t")
+    buf.set_thread_name(1, 2, "t again")  # deduped
+    buf.complete("span", 10.0, -5.0)      # negative dur clamps to 0
+    assert len(buf) == 3
+    assert buf.events[-1]["dur"] == 0.0
+    assert buf.to_json()["displayTimeUnit"] == "ms"
+
+
+def test_validate_trace_events_accepts_and_rejects():
+    ok = {"traceEvents": [
+        {"ph": "X", "name": "s", "ts": 0, "dur": 1, "pid": 1, "tid": 0},
+        {"ph": "i", "name": "e", "ts": 2, "pid": 1, "tid": 0, "s": "t"},
+        {"ph": "M", "name": "process_name", "pid": 1, "tid": 0,
+         "args": {"name": "p"}}]}
+    assert len(validate_trace_events(ok)) == 3
+    assert len(validate_trace_events(ok["traceEvents"])) == 3  # bare array
+    with pytest.raises(ValueError):
+        validate_trace_events({"notTrace": 1})
+    with pytest.raises(ValueError):
+        validate_trace_events([{"name": "no-ph"}])
+    with pytest.raises(ValueError):
+        validate_trace_events([{"ph": "X", "name": "s", "ts": 0}])  # no dur
+    with pytest.raises(ValueError):
+        validate_trace_events([{"ph": "i", "name": "s"}])           # no ts
+
+
+# --------------------------------------------------------------------------
+# runtime/metrics edge cases
+# --------------------------------------------------------------------------
+
+def _req(n_tokens, family="", n_pre=0, reason="", chunks=1):
+    m = RequestMetrics(family=family, arrival=0.0, admitted=0.1,
+                       first_token=0.2, finished=1.0, n_tokens=n_tokens,
+                       prefill_chunks=chunks, n_preemptions=n_pre,
+                       last_preempt_reason=reason)
+    m.itl = [0.01] * max(n_tokens - 1, 0)
+    return m
+
+
+def test_summarize_empty_window():
+    s = summarize([], wall_s=0.0)
+    assert s["n_requests"] == 0 and s["total_tokens"] == 0
+    assert math.isnan(s["tok_per_s"])
+    assert math.isnan(s["ttft"]["p50"]) and math.isnan(s["itl"]["p99"])
+    assert s["prefill_chunks"]["hist"] == {}
+    assert math.isnan(s["prefill_chunks"]["mean"])
+    assert s["preemptions"] == {"total": 0, "n_requests_preempted": 0,
+                                "max_per_request": 0, "by_reason": {}}
+    line = format_summary("empty", s)
+    assert "nan" not in line   # no "nanms" segments for an empty window
+
+
+def test_summarize_all_single_token():
+    """Single-token requests have no tpot; the summary line must not print
+    nanms for it (the original bug this PR's satellite fixes)."""
+    s = summarize([_req(1), _req(1)], wall_s=2.0)
+    assert s["n_requests"] == 2
+    assert math.isnan(s["tpot"]["p99"])
+    assert not math.isnan(s["ttft"]["p99"])   # ttft exists from token one
+    line = format_summary("single", s)
+    assert "nan" not in line
+    assert "ttft" in line and "tpot" not in line
+
+
+def test_summarize_mixed_family_keys():
+    s = summarize([_req(4, family="dense"), _req(4, family="ssm")],
+                  wall_s=1.0)
+    assert set(s["families"]) == {"dense", "ssm"}
+    for fam in ("dense", "ssm"):
+        assert s["families"][fam]["n_requests"] == 1
+        assert s["families"][fam]["total_tokens"] == 4
+    # requests served outside an engine (family unset) get no breakdown
+    assert "families" not in summarize([_req(4)], 1.0)
+    # a single NAMED family still gets its breakdown (the benchmark keys
+    # per-family lines off it even when one family dominates a window)
+    assert set(summarize([_req(4, family="dense")], 1.0)["families"]) == \
+        {"dense"}
+
+
+def test_summarize_preemption_block():
+    s = summarize([_req(4, n_pre=2, reason="decode_pressure"),
+                   _req(4, n_pre=1, reason="prefill_pressure"),
+                   _req(4)], wall_s=1.0)
+    assert s["preemptions"]["total"] == 3
+    assert s["preemptions"]["n_requests_preempted"] == 2
+    assert s["preemptions"]["max_per_request"] == 2
+    assert s["preemptions"]["by_reason"] == {"decode_pressure": 1,
+                                             "prefill_pressure": 1}
+    assert "| preempt 3" in format_summary("pre", s)
+
+
+def test_histogram_numeric_sort():
+    h = histogram([10, 2, 10, 1, 2, 10])
+    assert list(h) == ["1", "2", "10"]          # numeric, not lexical
+    assert h == {"1": 1, "2": 2, "10": 3}
+    assert histogram_str(["b", "a", "b"]) == {"a": 1, "b": 2}
+    assert list(histogram_str(["b", "a"])) == ["a", "b"]
+
+
+def test_percentiles_nan_paths():
+    p = percentiles([])
+    assert math.isnan(p["p50"]) and math.isnan(p["p99"])
+    p = percentiles([1.0])
+    assert p["p50"] == 1.0 and p["p99"] == 1.0
+    # tpot property guards the 0/1-token cases
+    assert _req(1).tpot == 0.0
+    assert _req(0).tpot == 0.0
+    assert _req(5).tpot == pytest.approx((1.0 - 0.2) / 4)
