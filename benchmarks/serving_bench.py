@@ -24,12 +24,24 @@ Four scenarios:
    share one host and wall clock, each replaying its own Poisson trace;
    the summary's ``families`` breakdown reports per-family tok/s and
    ttft/itl percentiles over the shared window.
+5. Speculative decoding: the 8:16(+outlier) compressed model drafts
+   --spec-k tokens per request per step for its DENSE COUNTERPART — the
+   densified realization of the same compressed weights
+   (``densify_params``), so the pair agrees the way a trained model and
+   its above-threshold compression do without needing trained weights —
+   on the paged layout, vs the non-speculative baseline and the
+   model-free n-gram proposer on the same trace.  Records acceptance
+   rate, accepted tokens/step, tok/s speedup, and a token-identity
+   cross-check of every greedy stream against the baseline.
 
 Every run also lands in a machine-readable ``BENCH_serving.json``
-(--out) so the perf trajectory is tracked across PRs.  Summaries record
-the engine placement (device count, mesh shape) and per-device tok/s;
-``--mesh 1x8`` runs the mesh-native tensor-parallel engine so single- vs
-multi-device results compare on the same schema.
+(--out) so the perf trajectory is tracked across PRs, with a top-level
+``summary`` block (aggregate tok/s, worst-case ITL percentiles, and a
+one-line digest per scenario) for trajectory diffs that don't have to
+walk the per-scenario trees.  Summaries record the engine placement
+(device count, mesh shape) and per-device tok/s; ``--mesh 1x8`` runs the
+mesh-native tensor-parallel engine so single- vs multi-device results
+compare on the same schema.
 
 CPU smoke:   python benchmarks/serving_bench.py --smoke
 Full-ish:    python benchmarks/serving_bench.py --requests 64 --rate 4 \
@@ -50,11 +62,12 @@ sys.path.insert(0, "src")
 from repro import configs                                      # noqa: E402
 from repro.core import SparsifyConfig                          # noqa: E402
 from repro.models import get_model                             # noqa: E402
-from repro.models.sparse_serving import sparsify_for_serving   # noqa: E402
+from repro.models.sparse_serving import (densify_params,       # noqa: E402
+                                         sparsify_for_serving)
 from repro.runtime.metrics import format_summary, summarize    # noqa: E402
 from repro.serving import (QueueFull, ServingEngine,           # noqa: E402
-                           TraceRequest, long_prompt_trace, poisson_trace,
-                           replay)
+                           SpeculativeConfig, TraceRequest,
+                           long_prompt_trace, poisson_trace, replay)
 
 
 def bench_cfg(args):
@@ -86,7 +99,7 @@ def _make_tracer(args, name: str):
 
 def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
                   max_len=None, n_blocks=None, token_budget=None,
-                  prefix_caching=True, trace_name=""):
+                  prefix_caching=True, trace_name="", draft=None):
     from repro.launch.mesh import make_serving_mesh
     return ServingEngine(
         cfg, params, n_slots=n_slots or args.slots,
@@ -95,7 +108,7 @@ def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
         max_prefill_per_step=args.max_prefill_per_step,
         kv_layout=kv_layout, block_size=args.block_size, n_blocks=n_blocks,
         prefix_caching=prefix_caching, mesh=make_serving_mesh(args.mesh),
-        tracer=_make_tracer(args, trace_name or kv_layout))
+        draft=draft, tracer=_make_tracer(args, trace_name or kv_layout))
 
 
 def _warm_and_replay(engine, trace, time_scale) -> dict:
@@ -286,6 +299,73 @@ def mixed_family_scenario(args) -> dict:
     return summary
 
 
+def speculative_scenario(cfg, args) -> dict:
+    """The 8:16 model drafts for its dense counterpart.
+
+    The pair is constructed so the agreement the paper measures on trained
+    models (the compressed model crosses the Performance Threshold, so its
+    tokens track the dense parent's) holds deterministically at smoke
+    scale: the draft is the 8:16+outlier compression of a fresh init and
+    the TARGET is ``densify_params`` of those same containers — the dense
+    realization of the compressed weights, served through the dense matmul
+    path while the draft runs the sparse kernels.  Three engines replay
+    the same greedy trace on the paged layout: no draft (baseline), the
+    sparse draft, and the model-free n-gram proposer.  Every stream must
+    be token-identical to the baseline (greedy speculative decoding is
+    exact); the sparse draft should accept nearly everything.
+    """
+    scfg = SparsifyConfig(weight_pattern=args.weight_pattern,
+                          outlier_pattern=args.outlier_pattern,
+                          scorer="magnitude", use_smoothquant=False)
+    sparse, _ = sparsify_for_serving(
+        get_model(cfg).init(jax.random.PRNGKey(args.seed)), scfg)
+    target = densify_params(sparse)
+    trace = poisson_trace(n_requests=args.requests, rate_per_s=args.rate,
+                          vocab=cfg.vocab,
+                          prompt_len=(args.prompt_min, args.prompt_max),
+                          max_new_tokens=args.gen, seed=args.seed + 4)
+    variants = (
+        ("baseline", None),
+        ("sparse_draft", SpeculativeConfig(k=args.spec_k, method="model",
+                                           params=sparse, cfg=cfg)),
+        ("ngram_draft", SpeculativeConfig(k=args.spec_k, method="ngram")),
+    )
+    out = {"spec_k": args.spec_k, "layout": "paged"}
+    base_streams = None
+    for name, draft in variants:
+        engine = _build_engine(cfg, target, args, "paged", draft=draft,
+                               trace_name=f"spec/{name}")
+        summary = _warm_and_replay(engine, trace, args.time_scale)
+        # greedy speculative streams must match the baseline exactly; the
+        # i-th submitted request of the timed window is the one with the
+        # i-th-smallest request id, in every engine
+        streams = [r.tokens for r in
+                   sorted(engine.finished, key=lambda r: r.request_id)]
+        if base_streams is None:
+            base_streams = streams
+        else:
+            summary["token_identical"] = streams == base_streams
+        out[name] = summary
+        line = format_summary(f"spec/{name}", summary)
+        sp = summary.get("speculative")
+        if sp:
+            line += (f" | {sp['accepted_per_step']:.2f} acc tok/step "
+                     f"(k={sp['k']})")
+        print(line)
+    base_tps = out["baseline"]["tok_per_s"]
+    for name in ("sparse_draft", "ngram_draft"):
+        s = out[name]
+        s["speedup_vs_baseline"] = (s["tok_per_s"] / base_tps
+                                    if base_tps > 0 else float("nan"))
+    sd = out["sparse_draft"]
+    print(f"speculative @ k={args.spec_k}: sparse-draft acceptance "
+          f"{sd['speculative']['acceptance_rate']:.2f}, "
+          f"{sd['speculative']['accepted_per_step']:.2f} accepted tok/step, "
+          f"{sd['speedup_vs_baseline']:.2f}x tok/s vs baseline, "
+          f"token_identical={sd['token_identical']}")
+    return out
+
+
 def prefill_curve_scenario(cfg, params, args) -> dict:
     """SLOW scenario (opt-in via --prefill-curve): very-long-prompt
     prefill time vs prompt length, chunked through the RETIRED
@@ -406,6 +486,56 @@ def prefill_curve_scenario(cfg, params, args) -> dict:
     return {"chunk": C, "points": curve}
 
 
+def _digest(name: str, s: dict | None) -> dict | None:
+    """One scenario's machine-comparable one-liner for the summary block.
+    NaNs become None so the summary stays strict-JSON diffable."""
+    if not s or "tok_per_s" not in s:
+        return None
+    import math
+
+    def num(x):
+        return None if x is None or (isinstance(x, float)
+                                     and math.isnan(x)) else x
+    d = {"tok_per_s": num(s.get("tok_per_s")),
+         "itl_p50": num(s.get("itl", {}).get("p50")),
+         "itl_p99": num(s.get("itl", {}).get("p99")),
+         "line": format_summary(name, s)}
+    sp = s.get("speculative")
+    if sp:
+        d["spec_acceptance_rate"] = num(sp.get("acceptance_rate"))
+        d["spec_accepted_per_step"] = num(sp.get("accepted_per_step"))
+    if "speedup_vs_baseline" in s:
+        d["speedup_vs_baseline"] = num(s["speedup_vs_baseline"])
+    if "token_identical" in s:
+        d["token_identical"] = s["token_identical"]
+    return d
+
+
+def summary_block(sections: dict) -> dict:
+    """Top-level ``summary`` for BENCH_serving.json: per-scenario digests
+    plus aggregate tok/s and worst-case ITL tails, so the bench trajectory
+    diffs across PRs without walking every per-scenario tree."""
+    scenarios = {}
+    for name, s in sections.items():
+        d = _digest(name, s)
+        if d is not None:
+            scenarios[name] = d
+    rates = [d["tok_per_s"] for d in scenarios.values()
+             if d["tok_per_s"] is not None]
+    p50s = [d["itl_p50"] for d in scenarios.values()
+            if d["itl_p50"] is not None]
+    p99s = [d["itl_p99"] for d in scenarios.values()
+            if d["itl_p99"] is not None]
+    return {
+        "n_scenarios": len(scenarios),
+        "tok_per_s_mean": sum(rates) / len(rates) if rates else None,
+        "tok_per_s_max": max(rates, default=None),
+        "itl_p50_worst": max(p50s, default=None),
+        "itl_p99_worst": max(p99s, default=None),
+        "scenarios": scenarios,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-paper")
@@ -451,6 +581,12 @@ def main(argv=None):
     # mixed-family co-hosting scenario
     ap.add_argument("--no-mixed-family", action="store_true",
                     help="skip the mixed-family (xlstm + dense) scenario")
+    # speculative-decoding scenario
+    ap.add_argument("--no-speculative", action="store_true",
+                    help="skip the speculative-decoding scenario")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="initial draft length for the speculative "
+                         "scenario")
     ap.add_argument("--long-requests", type=int, default=2)
     ap.add_argument("--long-short-requests", type=int, default=6)
     ap.add_argument("--long-len", type=int, default=256,
@@ -537,6 +673,10 @@ def main(argv=None):
     if not args.no_mixed_family:
         mixed_family = mixed_family_scenario(args)
 
+    speculative = None
+    if not args.no_speculative:
+        speculative = speculative_scenario(cfg, args)
+
     prefill_curve = None
     if args.prefill_curve:
         prefill_curve = prefill_curve_scenario(cfg, params, args)
@@ -559,8 +699,22 @@ def main(argv=None):
             "shared_prefix": shared,
             "long_prompt": long_prompt,
             "mixed_family": mixed_family,
+            "speculative": speculative,
             "prefill_curve": prefill_curve,
         }
+        sections = dict(results)
+        if shared:
+            sections["shared_prefix/slot"] = shared.get("slot")
+            sections["shared_prefix/paged"] = shared.get("paged")
+        if long_prompt:
+            sections["long_prompt/oneshot"] = long_prompt.get("oneshot")
+            sections["long_prompt/chunked"] = long_prompt.get("chunked")
+        if mixed_family:
+            sections["mixed_family"] = mixed_family
+        if speculative:
+            for v in ("baseline", "sparse_draft", "ngram_draft"):
+                sections[f"speculative/{v}"] = speculative.get(v)
+        payload["summary"] = summary_block(sections)
         if _OBS["registry"] is not None:
             payload["counters"] = _OBS["registry"].snapshot()
         with open(args.out, "w") as f:

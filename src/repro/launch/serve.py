@@ -35,6 +35,15 @@ head, explicit shardings on every jitted step.  Token-identical to the
 single-device engine.  On CPU, force host devices first:
 XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
+``--draft {ngram,sparse,self}`` turns on draft-verify speculative
+decoding (serving/speculative.py): ``sparse`` is the paper's deployment
+twist — the 8:16 + outlier compressed model drafts ``--spec-k`` tokens
+per request per step for its dense counterpart, and the dense target
+scores all k+1 positions in one fused verify call; ``ngram`` is the
+model-free prompt-lookup proposer; ``self`` drafts with the target's own
+params (an upper bound on acceptance, used by the parity tests).  Greedy
+speculative streams are token-identical to non-speculative ones.
+
 ``--trace-out trace.json`` turns on the observability substrate
 (serving/observe.py): a Chrome/Perfetto ``trace_event`` JSON of every
 request lifecycle, engine step, jitted call and preemption (load the file
@@ -126,6 +135,43 @@ def _engine_kwargs(args) -> dict:
                 prefix_caching=not args.no_prefix_cache, mesh=mesh)
 
 
+def _make_draft(cfg, params, args):
+    """A SpeculativeConfig from --draft/--spec-k, or None.
+
+    ``sparse`` sparsifies a fresh dense init with the run's compression
+    settings (the 8:16 model drafting for its dense counterpart); with
+    --sparse the target IS that model, so the draft degenerates to
+    self-drafting, which is still a valid (if pointless) configuration.
+    """
+    if args.draft in (None, "none"):
+        return None
+    from ..serving import SpeculativeConfig
+    max_k = max(8, args.spec_k)
+    if args.draft == "ngram":
+        return SpeculativeConfig(k=args.spec_k, max_k=max_k, method="ngram")
+    if args.draft == "self":
+        dparams = params
+    else:
+        from ..models.sparse_serving import sparsify_for_serving
+        dense = get_model(cfg).init(jax.random.PRNGKey(args.seed))
+        scfg = SparsifyConfig(weight_pattern=args.weight_pattern,
+                              outlier_pattern=args.outlier_pattern,
+                              scorer="magnitude", use_smoothquant=False)
+        dparams, _ = sparsify_for_serving(dense, scfg)
+    return SpeculativeConfig(k=args.spec_k, max_k=max_k, method="model",
+                             params=dparams, cfg=cfg)
+
+
+def _print_spec_stats(engine) -> None:
+    sp = engine.stats().get("speculative")
+    if sp:
+        print(f"  speculative[{sp['method']} k={sp['k']}]: "
+              f"acceptance {sp['acceptance_rate']:.2f}, "
+              f"{sp['accepted_per_step']:.2f} accepted tok/step "
+              f"({sp['accepted']}/{sp['drafted']} over "
+              f"{sp['n_spec_steps']} steps)")
+
+
 def _make_tracer(args):
     """A ServingTracer when --trace-out was given, else None (the engine
     then runs with NULL_TRACER: zero observability cost)."""
@@ -154,7 +200,8 @@ def run_engine(cfg, params, key, args, quiet: bool = False):
     tracer = _make_tracer(args)
     engine = ServingEngine(cfg, params,
                            max_len=args.prompt_len + args.gen,
-                           tracer=tracer, **_engine_kwargs(args))
+                           tracer=tracer, draft=_make_draft(cfg, params, args),
+                           **_engine_kwargs(args))
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
     # enc-dec requests carry their encoder features (same draw as the
     # one-shot loop, so --legacy parity compares like against like)
@@ -176,6 +223,7 @@ def run_engine(cfg, params, key, args, quiet: bool = False):
               f"{engine.n_steps} steps, {args.slots} slots)")
         if args.kv_layout == "paged":
             print(f"  paged: {engine.stats()['pool']}")
+        _print_spec_stats(engine)
     _write_observability(tracer, args)
     return jnp.asarray([r.tokens for r in reqs], jnp.int32)
 
@@ -186,11 +234,13 @@ def run_trace(cfg, params, args):
     from ..serving import ServingEngine, load_trace, replay
     tracer = _make_tracer(args)
     engine = ServingEngine(cfg, params, max_len=args.max_len,
-                           tracer=tracer, **_engine_kwargs(args))
+                           tracer=tracer, draft=_make_draft(cfg, params, args),
+                           **_engine_kwargs(args))
     trace = load_trace(args.trace)
     res = replay(engine, trace, time_scale=args.time_scale)
     summary = summarize([r.metrics for r in res["finished"]], res["wall_s"])
     print(format_summary("trace", summary))
+    _print_spec_stats(engine)
     if res["rejected"]:
         print(f"rejected by admission control: {res['rejected']}")
     _write_observability(tracer, args)
@@ -235,6 +285,16 @@ def main(argv=None):
     ap.add_argument("--max-prefill-per-step", type=int, default=None,
                     help="DEPRECATED: request-count interleave bound; "
                          "aliased to --token-budget N*capacity")
+    ap.add_argument("--draft", default="none",
+                    choices=("none", "ngram", "sparse", "self"),
+                    help="speculative-decoding proposer: 'sparse' drafts "
+                         "with the 8:16+outlier compressed model, 'ngram' "
+                         "with prompt-lookup, 'self' with the target's own "
+                         "params (parity/upper-bound runs)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="initial draft tokens per request per step (each "
+                         "request's k then adapts to its own observed "
+                         "acceptance)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--trace", default=None,

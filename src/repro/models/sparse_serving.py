@@ -118,6 +118,47 @@ def sparse_apply_pallas(sw: SparseWeight, x: jax.Array) -> jax.Array:
     return y.reshape(*lead, -1)
 
 
+def densify(sw: SparseWeight) -> jax.Array:
+    """Dense [..., out, in] reconstruction of the deployed buffers.
+
+    Inverse of the compression for serving purposes: running the engine on
+    ``densify_params(sparse)`` computes the same function as serving the
+    compressed containers, through the dense matmul path instead of the
+    sparse kernels.  The reconstruction einsums run in the deployed value
+    dtype — the same precision ``sparse_apply`` accumulates the one-hot
+    decompression in — so the two realizations agree to fusion rounding.
+    The speculative bench leans on this: the 8:16 draft's "dense
+    counterpart" target is its own densification, giving a deterministic
+    high-acceptance pair without trained weights.
+    """
+    lead = sw.nm_values.shape[:-1]                       # [..., out]
+    nb = sw.in_dim // sw.m
+    nm_vals = sw.nm_values
+    if sw.v_scale is not None:                           # int8 mode
+        nm_vals = (nm_vals.astype(jnp.float32)
+                   * sw.v_scale[..., None].astype(jnp.float32)
+                   ).astype(jnp.bfloat16)
+    idx = unpack_metadata(sw.nm_meta, sw.n)              # [..., nb, n]
+    vals = nm_vals.reshape(*lead, nb, sw.n)
+    onehot = jax.nn.one_hot(idx, sw.m, dtype=vals.dtype)
+    w = jnp.einsum("...bn,...bnm->...bm", vals, onehot
+                   ).reshape(*lead, sw.in_dim)
+    if sw.o_values is not None:
+        o_idx = _unpack_8bit(sw.o_meta, sw.o_n)
+        o_onehot = jax.nn.one_hot(o_idx, 256, dtype=sw.o_values.dtype)
+        w = w + jnp.einsum("...bn,...bnm->...bm", sw.o_values, o_onehot
+                           ).reshape(*lead, sw.in_dim)
+    return w
+
+
+def densify_params(params):
+    """Replace every SparseWeight in a served pytree with its dense
+    reconstruction (see ``densify``); dense leaves pass through."""
+    return jax.tree_util.tree_map(
+        lambda leaf: densify(leaf) if isinstance(leaf, SparseWeight) else leaf,
+        params, is_leaf=lambda leaf: isinstance(leaf, SparseWeight))
+
+
 # --------------------------------------------------------------------------
 # conversion
 # --------------------------------------------------------------------------

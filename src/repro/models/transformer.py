@@ -30,6 +30,13 @@ adapters over the same primitive for the legacy lock-step loop (and
 zamba's shared-attention block), so there is exactly one masking /
 RoPE-offset / write implementation.
 
+Speculative verify is the same entry with q_len = k+1: the engine feeds
+``[last_token, d1..dk]`` at cursor = written-prefix length and reads a
+distribution per position from one call — the per-query causal length
+mask makes the batched scoring bitwise-identical to k+1 sequential
+decode steps, which is what makes greedy speculative decoding
+token-identical to the non-speculative stream (serving/speculative.py).
+
 Sharding: the forward/decode paths are placement-agnostic.  Training and
 the dry-run shard through the activation policy (parallel/policy.py, a
 no-op when inactive); the serving engine instead commits params and KV

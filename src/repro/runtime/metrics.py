@@ -38,6 +38,12 @@ class RequestMetrics:
     # distinguish one thrashing request from many lightly-touched ones
     n_preemptions: int = 0
     last_preempt_reason: str = ""
+    # speculative decoding trail: draft tokens proposed for this request
+    # and how many the target accepted — the acceptance rate doubles as a
+    # live Divergent-Token probe of how closely the draft tracks the
+    # target (spec_accepted / spec_drafted)
+    spec_drafted: int = 0
+    spec_accepted: int = 0
     # every observed gap between consecutive generated tokens — includes
     # engine stalls (a long prefill sharing the step, preemption waits),
     # which is exactly what the decode-tail p99 must capture
@@ -119,6 +125,14 @@ def summarize(metrics: list[RequestMetrics], wall_s: float) -> dict:
                 if m.last_preempt_reason),
         },
     }
+    drafted = sum(m.spec_drafted for m in done)
+    if drafted:
+        accepted = sum(m.spec_accepted for m in done)
+        out["speculative"] = {
+            "drafted": drafted,
+            "accepted": accepted,
+            "acceptance_rate": accepted / drafted,
+        }
     families = sorted({m.family for m in done if m.family})
     if len(families) > 1 or (families and families != [""]):
         # mixed-family window: per-family throughput and latency tails,
@@ -168,4 +182,7 @@ def format_summary(name: str, s: dict) -> str:
     pre = s.get("preemptions", {})
     if pre.get("total", 0) > 0:
         line += f" | preempt {pre['total']}"
+    sp = s.get("speculative")
+    if sp:
+        line += f" | spec accept {sp['acceptance_rate']:.2f}"
     return line

@@ -19,6 +19,13 @@ layer (serving/placement.py) — token-identical to the single-device path.
 Dense params and SparseWeight compressed params (the paper's 8:16 +
 structured-outlier deployment) are served by the same engine.
 
+``draft=SpeculativeConfig(...)`` turns on draft-verify speculative
+decoding (serving/speculative.py): a cheap proposer — the 8:16-compressed
+model, any second parameter set, or an n-gram prompt-lookup — drafts k
+tokens per decoding request per step, and the target scores all k+1
+positions in ONE fused verify call through the same step pipeline.
+Greedy speculative streams are token-identical to non-speculative ones.
+
 ``tracer=ServingTracer()`` turns on the observability substrate
 (serving/observe.py): Perfetto trace spans for every request lifecycle and
 engine step, a Prometheus-text counter registry, and per-jitted-variant
@@ -40,6 +47,7 @@ from .state_pool import (EncDecPoolView, EncoderContextPool, HybridPoolView,
 from .scheduler import (CHUNK_QUANTUM, PREEMPT_DECODE_PRESSURE,
                         PREEMPT_PREFILL_PRESSURE, QueueFull, RequestQueue,
                         plan_chunks, resolve_token_budget,
-                        validate_token_budget)
+                        spec_verify_reserve, validate_token_budget)
+from .speculative import NGramProposer, SpeculativeConfig, Speculator
 from .trace import (TraceRequest, load_trace, long_prompt_trace,
                     poisson_trace, replay, save_trace)

@@ -117,11 +117,12 @@ from .observe import NULL_TRACER
 from .paged import OutOfBlocks
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
-from .sampling import sample_tokens
+from .sampling import sample_tokens_logprobs, verify_draft
 from .scheduler import (CHUNK_QUANTUM, PREEMPT_DECODE_PRESSURE,
                         PREEMPT_PREFILL_PRESSURE, QueueFull, RequestQueue,
                         pick_preemption_victim, plan_chunks,
-                        resolve_token_budget)
+                        resolve_token_budget, spec_verify_reserve)
+from .speculative import SpeculativeConfig, Speculator
 
 SUPPORTED_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec")
 KV_LAYOUTS = ("slot", "paged")
@@ -144,7 +145,7 @@ class ServingEngine:
                  prefix_caching: bool = True, lookahead_blocks: int = 1,
                  paged_attn_backend: str | None = None, mesh=None,
                  max_ctx: int | None = None, clock=time.monotonic,
-                 tracer=None):
+                 tracer=None, draft: SpeculativeConfig | None = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServingEngine supports {SUPPORTED_FAMILIES} families, not "
@@ -190,6 +191,25 @@ class ServingEngine:
         self.chunk_quantum = (self.token_budget if cfg.family == "ssm"
                               else CHUNK_QUANTUM)
         self.lookahead_blocks = lookahead_blocks
+        # speculative decoding (serving/speculative.py): a draft proposer
+        # shares slot identity with the target; each decode step drafts k
+        # tokens per request and verifies all k+1 candidate positions in
+        # ONE chunk-shaped step (n_new = k+1 per lane) — same jitted fn,
+        # same bucket ladder, so speculation adds no new compiled shapes
+        # beyond the S buckets it actually uses
+        self.spec = None
+        if draft is not None:
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    "speculative decoding needs a KV-transformer target "
+                    f"(dense/moe), not family {cfg.family!r}: rollback "
+                    "relies on the cursor hiding rejected positions, which "
+                    "recurrent state cannot do")
+            self.spec = Speculator(draft, cfg, self.placement,
+                                   n_slots=n_slots, max_len=max_len)
+        self.n_spec_steps = 0
+        self.n_drafted = 0
+        self.n_accepted = 0
         self.running: dict[int, Request] = {}        # slot/row -> request
         self.finished: list[Request] = []
         self._clock = clock
@@ -200,6 +220,8 @@ class ServingEngine:
         if self.tracer.enabled:
             self.tracer.attach(self)
             self.adapter.tracer = self.tracer
+            if self.spec is not None:
+                self.spec.set_tracer(self.tracer)
         self._next_id = 0
         self.n_steps = 0
         self.n_preemptions = 0
@@ -272,7 +294,18 @@ class ServingEngine:
             if tr.enabled:
                 tr.on_evict(req)
 
-        self._prefill_phase(stats, now)
+        # speculative decoding charges each decoding request's k+1 verify
+        # tokens against the step's token budget before prefill planning
+        # (scheduler.spec_verify_reserve) — the fused verify runs through
+        # the same chunk pipeline prefill does, so the budget stays an
+        # honest bound on the step's total token work
+        budget = self.token_budget
+        if self.spec is not None:
+            reserve = spec_verify_reserve(self.running, self.spec.cfg.k)
+            budget = max(budget - reserve, 0)
+            stats["spec_reserved"] = min(reserve, self.token_budget)
+
+        self._prefill_phase(stats, now, budget)
 
         self.max_running = max(self.max_running, len(self.running))
         if any(r.status is Status.RUNNING for r in self.running.values()):
@@ -302,6 +335,20 @@ class ServingEngine:
         pool_stats = getattr(self.pool, "stats", None)
         if pool_stats is not None:
             out["pool"] = pool_stats()
+        if self.spec is not None:
+            out["speculative"] = {
+                "method": self.spec.cfg.method,
+                "k": self.spec.cfg.k,
+                "n_spec_steps": self.n_spec_steps,
+                "drafted": self.n_drafted,
+                "accepted": self.n_accepted,
+                "acceptance_rate": (self.n_accepted / self.n_drafted
+                                    if self.n_drafted else 0.0),
+                # >1 means speculation is beating sequential decode: each
+                # verify step emits accepted/steps drafts plus its
+                # correction/bonus token
+                "accepted_per_step": (self.n_accepted / self.n_spec_steps
+                                      if self.n_spec_steps else 0.0)}
         return out
 
     def reset_stats(self) -> None:
@@ -311,6 +358,9 @@ class ServingEngine:
         self.n_steps = 0
         self.n_preemptions = 0
         self.max_running = 0
+        self.n_spec_steps = 0
+        self.n_drafted = 0
+        self.n_accepted = 0
         if self.kv_layout == "paged":
             self.pool.reset_stats()
 
@@ -333,10 +383,14 @@ class ServingEngine:
         return seq[:-1] if req.tokens else seq
 
     # -------------------------------------------------------- prefill phase
-    def _prefill_phase(self, stats: dict, now: float) -> None:
-        """Spend up to ``token_budget`` prompt tokens: advance in-flight
-        prefill cursors first (admission order), then admit new requests
-        from the queue head, FIFO, with layout-aware placement."""
+    def _prefill_phase(self, stats: dict, now: float,
+                       budget: int | None = None) -> None:
+        """Spend up to ``budget`` (default: the full token budget) prompt
+        tokens: advance in-flight prefill cursors first (admission order),
+        then admit new requests from the queue head, FIFO, with
+        layout-aware placement."""
+        if budget is None:
+            budget = self.token_budget
         tr = self.tracer
         if tr.enabled:
             tr.begin_phase("plan")
@@ -344,7 +398,8 @@ class ServingEngine:
             (r for r in self.running.values()
              if r.status is Status.PREFILLING),
             key=lambda r: (r.metrics.admitted, r.request_id))
-        spec = [(r, len(self._seq(r)) - r.prefill_cursor) for r in in_flight]
+        flight = [(r, len(self._seq(r)) - r.prefill_cursor)
+                  for r in in_flight]
         queued = [(r, len(self._seq(r))) for r in self.queue]
 
         def try_admit(req, chunk):
@@ -383,7 +438,7 @@ class ServingEngine:
             stats["admitted"] += 1
             return len(seq) - n_cached
 
-        chunk_plan = plan_chunks(spec, queued, self.token_budget,
+        chunk_plan = plan_chunks(flight, queued, budget,
                                  self.chunk_quantum, try_admit)
 
         runnable = []
@@ -455,6 +510,12 @@ class ServingEngine:
         # resumed requests continue their sampling stream at token index
         # len(tokens); fresh requests start at 0
         self._gen_count[slot] = len(req.tokens)
+        if self.spec is not None:
+            if req.draft_k == 0:
+                req.draft_k = self.spec.cfg.k
+            # whatever the draft arena holds at this slot belongs to a
+            # previous occupant; the drafter catches up lazily from 0
+            self.spec.on_admit(slot)
 
     def _run_chunk_group(self, group: list[tuple], cursor: int, bucket: int,
                          stats: dict) -> int:
@@ -559,6 +620,8 @@ class ServingEngine:
         token — see cache_pool/pool docstrings for why the stray write is
         harmless)."""
         stats = stats if stats is not None else {"preempted": 0}
+        if self.spec is not None:
+            return self._speculative_decode(stats)
         tr = self.tracer
         active = self._decode_rows()
         if self.kv_layout == "paged":
@@ -591,22 +654,176 @@ class ServingEngine:
             tr.end_phase(finished=n_finished)
         return n_finished
 
+    def _speculative_decode(self, stats: dict) -> int:
+        """Draft k tokens per decoding request, verify all k+1 candidate
+        positions in ONE fused chunk-shaped step, emit the accepted prefix
+        plus a correction/bonus token, and roll the cursor back over the
+        rejected tail.
+
+        The verify call is the engine's existing ``step_chunk`` with
+        per-lane ``cursor = len(seq) - 1`` (the last emitted token's KV is
+        written here, preserving the written-positions invariant) and
+        ``n_new = n_draft + 1``; both the batch and S axes ride the
+        ``_bucket`` ladders, so speculation compiles a handful of shapes
+        total, never one per k.  Rollback is ``advance_prefill`` to
+        ``cursor + accepted + 1``: the garbage KV beyond it is hidden by
+        the cursor length mask (slot) or sits in blocks the row still owns
+        (paged) until the next step overwrites it."""
+        tr = self.tracer
+        spec = self.spec
+        active = self._decode_rows()
+        seqs = {s: self._seq(self.running[s]) for s in active}
+        cap = self.pool.max_request_tokens
+        ks = []
+        for s in active:
+            req = self.running[s]
+            # never draft past the request's finish line or the row's KV
+            # capacity (the verify writes len(seq)-1 + k + 1 positions)
+            k = min(req.draft_k,
+                    req.sampling.max_new_tokens - len(req.tokens) - 1,
+                    cap - len(seqs[s]))
+            ks.append(max(k, 0))
+
+        if tr.enabled:
+            tr.begin_phase("draft", n_rows=len(active))
+        proposals = spec.propose(active, [seqs[s] for s in active], ks)
+        drafts = dict(zip(active, proposals))
+        if tr.enabled:
+            tr.end_phase(drafted=sum(len(d) for d in proposals))
+
+        if self.kv_layout == "paged":
+            while True:
+                try:
+                    self.pool.prepare_decode(
+                        active, [len(drafts[s]) + 1 for s in active])
+                    break
+                except OutOfBlocks:
+                    if len(self.running) <= 1:
+                        raise CachePoolError(
+                            "sole running request cannot grow its KV")
+                    self._preempt_one(stats, reason=PREEMPT_DECODE_PRESSURE)
+                    active = self._decode_rows()
+            if not active:
+                return 0
+
+        n = len(active)
+        nds = [len(drafts[s]) for s in active]
+        # Verify always runs the full lane complement (like fused decode):
+        # a constant B keeps the compiled-variant count linear in the S
+        # ladder instead of B x S, so a trickle of arrivals can't hit
+        # batch shapes the warmup never saw.
+        B = _bucket(self.pool.n_slots, 1)
+        S = _bucket(max(nds) + 1, 1)
+        tokens = np.zeros((B, S), np.int32)
+        cur = np.zeros((B,), np.int32)
+        n_new = np.zeros((B,), np.int32)
+        draft_arr = np.zeros((B, S), np.int32)
+        n_draft = np.zeros((B,), np.int32)
+        lane_slot = np.zeros((B,), np.int64)     # pad lanes borrow slot 0
+        for i, s in enumerate(active):
+            nd = nds[i]
+            cur[i] = len(seqs[s]) - 1
+            tokens[i, 0] = self._last_token[s]
+            if nd:
+                tokens[i, 1:1 + nd] = drafts[s]
+                draft_arr[i, :nd] = drafts[s]
+            n_new[i] = nd + 1
+            n_draft[i] = nd
+            lane_slot[i] = s
+        if self.kv_layout == "paged":
+            lanes = self.pool.lane_tables(active, B)
+        else:
+            lanes = self.pool.lane_rows(active, B)
+        if tr.enabled:
+            tr.begin_phase("verify", n_rows=n, s_bucket=S,
+                           drafted=int(n_draft.sum()))
+        logits = self.adapter.step_chunk(
+            active, jnp.asarray(lanes), jnp.asarray(cur), jnp.asarray(n_new),
+            jnp.asarray(tokens))
+        # leave-one-in verification over the whole (bucketed) batch — pad
+        # lanes verify slot 0's parameters against garbage and are never
+        # read, keeping verify_draft's compiled shapes on the same ladder
+        n_acc, v_toks, v_lps = verify_draft(
+            logits.astype(jnp.float32), jnp.asarray(draft_arr),
+            jnp.asarray(n_draft), jnp.asarray(self._temps[lane_slot]),
+            jnp.asarray(self._topks[lane_slot]),
+            jnp.asarray(self._seeds[lane_slot]),
+            jnp.asarray(self._gen_count[lane_slot]))
+        n_acc = np.asarray(n_acc)
+        v_toks = np.asarray(v_toks)
+        v_lps = np.asarray(v_lps)
+        if tr.enabled:
+            tr.end_phase(accepted=int(n_acc[:n].sum()))
+
+        # cursor rollback/advance BEFORE emission releases any slot: each
+        # row's written positions become exactly len(seq) - 1 again once
+        # its accepted+1 tokens are appended (the engine invariant)
+        self.pool.advance_prefill(
+            active, [int(cur[i]) + 1 + int(n_acc[i]) for i in range(n)])
+
+        if tr.enabled:
+            tr.begin_phase("emit", n_rows=n)
+        now = self._clock()
+        n_finished = 0
+        drafted = accepted = emitted = 0
+        for i, s in enumerate(active):
+            req = self.running[s]
+            nd, a = nds[i], int(n_acc[i])
+            drafted += nd
+            accepted += a
+            req.metrics.spec_drafted += nd
+            req.metrics.spec_accepted += a
+            if spec.cfg.adaptive and nd > 0:
+                if a == nd:
+                    req.draft_k = min(req.draft_k + 1, spec.cfg.max_k)
+                elif 2 * a < nd:
+                    req.draft_k = max(req.draft_k - 1, spec.cfg.min_k)
+            spec.rollback(s, nd, a)
+            sp = req.sampling
+            for j in range(a + 1):
+                tok = int(v_toks[i, j])
+                req._emit(tok, now, logprob=float(v_lps[i, j]))
+                self._last_token[s] = tok
+                self._gen_count[s] += 1
+                emitted += 1
+                if (len(req.tokens) >= sp.max_new_tokens
+                        or (sp.eos_id is not None and tok == sp.eos_id)):
+                    req._finish(Status.FINISHED, now)
+                    self.finished.append(req)
+                    del self.running[s]
+                    self.pool.release(s)
+                    n_finished += 1
+                    if tr.enabled:
+                        tr.on_finish(req)
+                    break
+        self.n_spec_steps += 1
+        self.n_drafted += drafted
+        self.n_accepted += accepted
+        stats["decoded"] = n
+        stats["spec_drafted"] = drafted
+        stats["spec_accepted"] = accepted
+        stats["spec_emitted"] = emitted
+        if tr.enabled:
+            tr.end_phase(finished=n_finished)
+        return n_finished
+
     def _emit_tokens(self, slots: list[int]) -> int:
         """Sample one token for ``slots`` from _slot_logits, stream it, and
         retire requests that hit max_new_tokens / EOS.  Returns retirements."""
         tr = self.tracer
         if tr.enabled:
             tr.begin_phase("emit", n_rows=len(slots))
-        toks = np.asarray(sample_tokens(
+        toks, lps = sample_tokens_logprobs(
             self._slot_logits, jnp.asarray(self._temps),
             jnp.asarray(self._topks), jnp.asarray(self._seeds),
-            jnp.asarray(self._gen_count)))
+            jnp.asarray(self._gen_count))
+        toks, lps = np.asarray(toks), np.asarray(lps)
         now = self._clock()
         n_finished = 0
         for slot in slots:
             req = self.running[slot]
             tok = int(toks[slot])
-            req._emit(tok, now)
+            req._emit(tok, now, logprob=float(lps[slot]))
             self._last_token[slot] = tok
             self._gen_count[slot] += 1
             sp = req.sampling

@@ -106,6 +106,10 @@ class FamilyAdapter:
     # construction when tracing is on; the default NULL_TRACER keeps
     # ``_traced`` a direct call with no per-step work (serving/observe.py)
     tracer = NULL_TRACER
+    # distinguishes co-resident adapters sharing one tracer: the
+    # speculative draft model's adapter sets "draft_" so its jit variants
+    # attribute as draft_step/draft_decode, separate from the target's
+    trace_kind_prefix = ""
 
     def _traced(self, kind: str, fn, args: tuple):
         """Run a jitted step function, attributed when tracing is on:
@@ -113,7 +117,7 @@ class FamilyAdapter:
         variant (``ServingTracer.jit_call``)."""
         if not self.tracer.enabled:
             return fn(*args)
-        return self.tracer.jit_call(kind, fn, args)
+        return self.tracer.jit_call(self.trace_kind_prefix + kind, fn, args)
 
     def on_admit(self, req, slot: int) -> int:
         return 0

@@ -28,7 +28,9 @@ and the same hooks populate three artifacts:
 
 2. **Counters/gauges** (``MetricsRegistry``): tokens prefilled/decoded,
    requests finished/evicted, preemptions by reason, compiles/retraces
-   per jitted function, prefix-cache lookups/hit-tokens, plus per-step
+   per jitted function, prefix-cache lookups/hit-tokens, speculative
+   draft/accept/emit token counters (plus a per-step acceptance-rate
+   gauge — the live Divergent-Token probe), and per-step
    gauges (queue depth, running, pool occupancy, budget utilization) —
    all labelled by model family — rendered as a Prometheus text snapshot
    (``counters_text()``) and sampled into the trace as "C" counter
@@ -220,6 +222,18 @@ class ServingTracer:
             "serving_prefix_cache_hit_tokens_total",
             "prompt tokens skipped via prefix-cache matches")
         self.c_steps = r.counter("serving_steps_total", "engine steps run")
+        self.c_spec_drafted = r.counter(
+            "serving_spec_tokens_drafted_total",
+            "draft tokens proposed to the speculative verify step")
+        self.c_spec_accepted = r.counter(
+            "serving_spec_tokens_accepted_total",
+            "draft tokens the target model accepted")
+        self.c_spec_emitted = r.counter(
+            "serving_spec_tokens_emitted_total",
+            "tokens emitted by speculative steps (accepted + bonus)")
+        self.g_spec_accept = r.gauge(
+            "serving_spec_acceptance_rate",
+            "per-step draft acceptance rate (accepted / drafted)")
         self.g_queue = r.gauge("serving_queue_depth", "requests queued")
         self.g_running = r.gauge("serving_running", "requests in slots")
         self.g_pool_free = r.gauge(
@@ -267,6 +281,15 @@ class ServingTracer:
         sample = {"queue_depth": queue_depth, "running": running,
                   "pool_free": engine.pool.n_free,
                   "budget_utilization": round(util, 4)}
+        if "spec_drafted" in stats:
+            drafted = stats["spec_drafted"]
+            accepted = stats.get("spec_accepted", 0)
+            self.c_spec_drafted.inc(drafted, **lb)
+            self.c_spec_accepted.inc(accepted, **lb)
+            self.c_spec_emitted.inc(stats.get("spec_emitted", 0), **lb)
+            rate = accepted / drafted if drafted else 0.0
+            self.g_spec_accept.set(rate, **lb)
+            sample["spec_acceptance_rate"] = round(rate, 4)
         if engine.kv_layout == "paged":
             pool = engine.pool
             self.g_blocks_free.set(pool.blocks.n_free, **lb)

@@ -299,25 +299,62 @@ class PagedKVPool:
         if self.prefix_cache is not None:
             self.prefix_cache.insert(tokens, self.tables[row].blocks)
 
-    def prepare_decode(self, rows: list[int]) -> None:
-        """Ensure every active row can write its next position: allocate a
-        block at each block boundary (raises ``OutOfBlocks`` — the engine
-        preempts and retries) and copy-on-write in the defensive case of a
-        shared block in write position."""
+    def prepare_decode(self, rows: list[int],
+                       n_tokens: list[int] | None = None) -> None:
+        """Ensure every active row can write its next ``n_tokens[i]``
+        positions (1 each when omitted — plain decode; a speculative
+        verify step writes its k+1 candidate positions in one fused
+        step).  Allocates blocks across each row's write range [pos,
+        pos + n) (raises ``OutOfBlocks`` — the engine preempts and
+        retries) and copies-on-write any shared block inside it: a
+        prefix-cache or fork sharer must never see this row's fresh —
+        possibly later rejected and rolled back — tokens."""
         bs = self.block_size
-        for row in rows:
+        ns = [1] * len(rows) if n_tokens is None else n_tokens
+        for row, n in zip(rows, ns):
             pos = int(self._pos_np[row])
+            n = max(n, 1)
+            if pos + n > self.max_request_tokens:
+                raise CapacityError(
+                    f"decode write of {n} tokens at position {pos} exceeds "
+                    f"pool capacity {self.max_request_tokens}")
             t = self.tables[row]
-            bi = pos // bs
-            if bi >= t.n_blocks:
-                t.append_block(self._alloc_block())
-                self._bt_np[row, bi] = t.blocks[bi]
-                self._bt_dirty = True
-            elif self.blocks.ref[t.blocks[bi]] > 1:
-                fresh = self._cow(t.blocks[bi])
-                t.replace_block(bi, fresh)
-                self._bt_np[row, bi] = fresh
-                self._bt_dirty = True
+            for bi in range(pos // bs, (pos + n - 1) // bs + 1):
+                if bi >= t.n_blocks:
+                    t.append_block(self._alloc_block())
+                    self._bt_np[row, bi] = t.blocks[bi]
+                    self._bt_dirty = True
+                elif self.blocks.ref[t.blocks[bi]] > 1:
+                    fresh = self._cow(t.blocks[bi])
+                    t.replace_block(bi, fresh)
+                    self._bt_np[row, bi] = fresh
+                    self._bt_dirty = True
+
+    def fork(self, row: int) -> int:
+        """Fork ``row`` copy-on-write into a fresh row: the new row's
+        table shares every parent block read-only (incref only — no KV
+        bytes move).  The first write either side makes inside a shared
+        block goes through ``BlockPool.copy_on_write``
+        (``prepare_decode``/``ensure_capacity``/``admit``), so the two
+        sequences diverge block-by-block from the fork point — the
+        substrate tree/forked draft speculation builds on.  Raises
+        ``CapacityError`` when no free row is available (callers treat it
+        like admission pressure, not a bug)."""
+        t = self.tables[row]
+        if t is None:
+            raise CachePoolError(f"fork of free row {row}")
+        if not self._free_rows:
+            raise CapacityError("fork with no free row available")
+        for b in t.blocks:
+            self.blocks.incref(b)
+        new = self._free_rows.pop()
+        self.tables[new] = BlockTable(self.block_size, list(t.blocks),
+                                      t.n_cached_tokens)
+        self._bt_np[new, :] = self._trash
+        self._bt_np[new, :t.n_blocks] = t.blocks
+        self._bt_dirty = True
+        self._pos_np[new] = self._pos_np[row]
+        return new
 
     # --------------------------------------------------------- lifecycle
     def adopt(self, k, v) -> None:

@@ -35,6 +35,11 @@ Placement policy — deliberately different from the training rules in
     decode attention is head-local on every shard.  Block tables, the
     prefix cache, free lists, and refcounts stay host-side numpy —
     placement-agnostic scheduling state, never sharded.
+  * **Draft params ride the same placement.**  Speculative decoding's
+    drafter (serving/speculative.py) calls ``param_shardings`` on its own
+    (smaller) parameter pytree — the rules here are name/shape-generic,
+    so the draft model co-resides with the target under the identical
+    out-dim policy and the fused verify stays parity-exact on a mesh.
   * **The activation-sharding policy (parallel/policy.py) is NOT
     activated.**  Beyond being unnecessary (GSPMD propagates the weight
     shardings), an active policy flips MoE onto the capacity-bounded

@@ -78,6 +78,14 @@ class Request:
     # preemption, restored verbatim at re-admission so resumed token
     # streams are exactly the uninterrupted ones
     swap: Any = None
+    # speculative decoding: this request's current draft length (the
+    # engine initializes it from SpeculativeConfig.k at admission and,
+    # when adaptive, walks it within [min_k, max_k] by the request's own
+    # acceptance history — it survives preemption with the request)
+    draft_k: int = 0
+    # per-token chosen-token log-probabilities (log-softmax of the raw
+    # logits at each emitted token), parallel to ``tokens``
+    logprobs: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -87,15 +95,19 @@ class Request:
     def done(self) -> bool:
         return self.status in (Status.FINISHED, Status.EVICTED)
 
-    def _emit(self, token: int, now: float) -> None:
+    def _emit(self, token: int, now: float,
+              logprob: float | None = None) -> None:
         if not self.tokens:
             self.metrics.first_token = now
         else:
             # inter-token gap as the user experiences it: includes any
             # engine stall (long prefill in the step, preemption wait)
+            # — a speculative verify step's burst arrives with 0 gaps
             self.metrics.itl.append(now - self.metrics.last_token_at)
         self.metrics.last_token_at = now
         self.tokens.append(token)
+        if logprob is not None:
+            self.logprobs.append(logprob)
         self.metrics.n_tokens = len(self.tokens)
         if self.on_token is not None:
             self.on_token(self, token)

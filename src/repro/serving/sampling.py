@@ -1,4 +1,4 @@
-"""Vectorized per-slot token sampling.
+"""Vectorized per-slot token sampling and draft verification.
 
 One jitted function over the whole slot batch: greedy rows (temperature<=0)
 take argmax — bit-identical to the one-shot serve loop — while stochastic
@@ -7,6 +7,36 @@ Each row's PRNG key is derived in-graph from its request seed and token
 index (fold_in), so the host only ships small int/float vectors per step.
 Inactive slots ride along (their outputs are discarded by the engine),
 keeping shapes static so nothing retraces.
+
+``sample_tokens_logprobs`` additionally returns each row's chosen-token
+log-probability under the UNMODIFIED model distribution (log-softmax of
+the raw logits, temperature-independent — the number APIs report as the
+token logprob), so streaming consumers get per-token confidence for free.
+
+``verify_draft`` is the speculative-decoding acceptance rule over a fused
+verify step's logits (serving/speculative.py): **leave-one-in rejection
+sampling**.  Position j of a row proposes draft token d_j against the
+target distribution p_j (temperature/top-k adjusted, exactly the
+distribution ``sample_tokens`` draws from):
+
+  greedy rows      accept while argmax(p_j) == d_j; the emitted token at
+                   every position IS the argmax, so the accepted prefix
+                   plus the first correction is token-identical to
+                   sequential greedy decode;
+  stochastic rows  accept d_j with probability p_j(d_j) (u < p_j(d_j),
+                   u ~ U[0,1) keyed by (seed, token index)); a rejected
+                   position leaves the draft token OUT and resamples from
+                   p_j renormalized without it — which preserves the
+                   target distribution for any deterministic proposer
+                   (accept keeps the draft "in", reject removes exactly
+                   the mass the acceptance branch already spent).
+
+The position AFTER the last draft (the bonus position) always samples
+from the full target distribution, so every verify step emits at least
+one token.  Stochastic verification consumes randomness differently from
+sequential decode (one acceptance draw + possible resample per position
+vs one draw per token), so only GREEDY speculative streams are
+token-identical to non-speculative decode — the tested contract.
 """
 from __future__ import annotations
 
@@ -14,15 +44,20 @@ import jax
 import jax.numpy as jnp
 
 
+def _restricted_logits(logits, temperature, top_k):
+    """Temperature + top-k adjusted logits ([..., V] f32): the
+    distribution stochastic sampling draws from (k==0 keeps all)."""
+    lf = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    v = lf.shape[-1]
+    kth_idx = jnp.clip(top_k - 1, 0, v - 1)
+    kth_val = jnp.sort(lf, axis=-1)[..., ::-1][..., kth_idx]
+    return jnp.where((top_k > 0) & (lf < kth_val[..., None]), -jnp.inf, lf)
+
+
 def _sample_row(logits, temperature, top_k, seed, step):
     """logits [V]; returns a sampled token id (scalar int32)."""
     greedy = jnp.argmax(logits).astype(jnp.int32)
-    lf = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
-    # top-k: drop everything below the k-th largest logit (k==0 keeps all)
-    v = logits.shape[-1]
-    kth_idx = jnp.clip(top_k - 1, 0, v - 1)
-    kth_val = jnp.sort(lf)[::-1][kth_idx]
-    restricted = jnp.where((top_k > 0) & (lf < kth_val), -jnp.inf, lf)
+    restricted = _restricted_logits(logits, temperature, top_k)
     key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
     drawn = jax.random.categorical(key, restricted).astype(jnp.int32)
     return jnp.where(temperature <= 0.0, greedy, drawn)
@@ -32,3 +67,77 @@ def _sample_row(logits, temperature, top_k, seed, step):
 def sample_tokens(logits, temperatures, top_ks, seeds, steps):
     """logits [B, V]; per-row temperature/top_k/seed/token-index -> [B]."""
     return jax.vmap(_sample_row)(logits, temperatures, top_ks, seeds, steps)
+
+
+@jax.jit
+def sample_tokens_logprobs(logits, temperatures, top_ks, seeds, steps):
+    """Like ``sample_tokens`` but also returns each chosen token's
+    log-probability under log-softmax of the raw logits ([B], [B])."""
+    toks = jax.vmap(_sample_row)(logits, temperatures, top_ks, seeds, steps)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    chosen = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
+    return toks, chosen
+
+
+def _verify_row(logits, draft, n_draft, temperature, top_k, seed, step0):
+    """One row of the fused verify step (see module docstring).
+
+    logits [S, V]: target logits, position j conditioned on the row's
+    history plus draft tokens d_1..d_j; draft [S]: d_1..d_{n_draft} left-
+    aligned (the rest padding); ``step0`` the token index of the first
+    candidate (continues the request's (seed, index) sampling stream).
+
+    Returns (n_accept, tokens [S], logprobs [S]): tokens[:n_accept] are
+    the accepted draft tokens, tokens[n_accept] the correction (rejected
+    position, leave-one-in resample) or bonus (all accepted) token — the
+    engine emits tokens[:n_accept + 1].  Positions past the cut are
+    computed but never read.
+    """
+    S, V = logits.shape
+    idx = jnp.arange(S)
+    lf32 = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lf32, axis=-1).astype(jnp.int32)
+
+    restricted = _restricted_logits(lf32, temperature, top_k)
+    logp = jax.nn.log_softmax(restricted, axis=-1)
+    keys = jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.PRNGKey(seed), step0 + i))(idx)
+    u = jax.vmap(lambda k: jax.random.uniform(jax.random.fold_in(k, 0)))(keys)
+    p_draft = jnp.exp(jnp.take_along_axis(logp, draft[:, None], axis=-1)[:, 0])
+    accept_stoch = u < p_draft
+    # leave-one-in: an accepted position keeps the draft token; a rejected
+    # one resamples with the draft token's mass removed (renormalized by
+    # the softmax), preserving the target distribution overall
+    without_draft = jnp.where(jnp.arange(V)[None, :] == draft[:, None],
+                              -jnp.inf, logp)
+    resampled = jax.vmap(
+        lambda k, lp: jax.random.categorical(jax.random.fold_in(k, 1), lp))(
+            keys, without_draft).astype(jnp.int32)
+    bonus = jax.vmap(
+        lambda k, lp: jax.random.categorical(jax.random.fold_in(k, 1), lp))(
+            keys, logp).astype(jnp.int32)
+
+    is_draft_pos = idx < n_draft
+    stoch_tok = jnp.where(is_draft_pos,
+                          jnp.where(accept_stoch, draft, resampled), bonus)
+    tok = jnp.where(temperature <= 0.0, greedy_tok, stoch_tok)
+    accept = is_draft_pos & jnp.where(temperature <= 0.0,
+                                      greedy_tok == draft, accept_stoch)
+    n_accept = jnp.sum(jnp.cumprod(accept.astype(jnp.int32)))
+    chosen = jnp.take_along_axis(jax.nn.log_softmax(lf32, axis=-1),
+                                 tok[:, None], axis=-1)[:, 0]
+    return n_accept.astype(jnp.int32), tok, chosen
+
+
+@jax.jit
+def verify_draft(logits, draft, n_draft, temperatures, top_ks, seeds, steps):
+    """Batched leave-one-in draft verification.
+
+    logits [B, S, V] (f32), draft [B, S], n_draft [B] (real drafts per
+    row; the rest of each row is padding), per-row sampling params, and
+    steps [B] = each row's generated-token count (the sampling-stream
+    index of its first candidate).  Returns (n_accept [B], tokens [B, S],
+    logprobs [B, S]); row b emits tokens[b, :n_accept[b] + 1].
+    """
+    return jax.vmap(_verify_row)(logits, draft, n_draft, temperatures,
+                                 top_ks, seeds, steps)

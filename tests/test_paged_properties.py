@@ -1,8 +1,9 @@
 """Property tests: PrefixCache + BlockPool accounting invariants.
 
 A seeded random walk over the paged pool's public lifecycle (admit with
-prefix matching, release, LRU evict, decode-step block growth) checks
-after EVERY operation that
+prefix matching, release, LRU evict, decode-step block growth — single
+and multi-token, the speculative verify write — and copy-on-write row
+forks) checks after EVERY operation that
 
   * refcounts are never negative and exactly equal the ground truth
     (one ref per block-table entry + one per prefix-cache entry + the
@@ -29,6 +30,7 @@ except ImportError:                               # pragma: no cover
     from hypothesis_fallback import given, settings, st
 
 from repro import configs
+from repro.serving.cache_pool import CapacityError
 from repro.serving.paged import BlockPool, OutOfBlocks, PagedKVPool
 
 CFG = dataclasses.replace(configs.get_smoke("llama-paper"),
@@ -72,7 +74,8 @@ def test_pool_lifecycle_invariants_hold(seed):
     active: dict[int, list[int]] = {}             # row -> full token seq
 
     for _ in range(40):
-        op = rng.choice(("admit", "admit", "release", "evict", "decode"))
+        op = rng.choice(("admit", "admit", "release", "evict", "decode",
+                         "decode", "fork"))
         if op == "admit":
             # tiny alphabet so identical prefixes (cache hits) are common
             toks = [rng.randint(0, 2) for _ in
@@ -103,13 +106,31 @@ def test_pool_lifecycle_invariants_hold(seed):
                     "LRU evicted a block a live request references"
         elif op == "decode" and active:
             row = rng.choice(sorted(active))
-            if int(pool._pos_np[row]) < pool.max_request_tokens:
+            # n > 1 is the speculative verify write: k drafts + 1 bonus
+            # land through one prepare_decode across [pos, pos + n)
+            n = rng.choice((1, 1, rng.randint(2, BS + 1)))
+            if int(pool._pos_np[row]) + n <= pool.max_request_tokens:
                 try:
-                    pool.prepare_decode([row])
+                    pool.prepare_decode([row], [n])
                 except OutOfBlocks:
                     pass
                 else:
-                    pool._pos_np[row] += 1
+                    pool._pos_np[row] += n
+                    # the write range must be private to this row now
+                    t = pool.tables[row]
+                    pos = int(pool._pos_np[row])
+                    for bi in range((pos - n) // BS, (pos - 1) // BS + 1):
+                        assert pool.blocks.ref[t.blocks[bi]] == 1, \
+                            "decode wrote into a shared block"
+        elif op == "fork" and active:
+            row = rng.choice(sorted(active))
+            try:
+                new = pool.fork(row)
+            except (CapacityError, OutOfBlocks):
+                pass                              # row/block pressure, not a bug
+            else:
+                assert pool.tables[new].blocks == pool.tables[row].blocks
+                active[new] = list(active[row])
         _check_invariants(pool)
 
     for row in sorted(active):                    # drain; nothing may leak
@@ -140,3 +161,58 @@ def test_copy_on_write_preserves_contents(seed):
                                                kval))
     np.testing.assert_array_equal(np.asarray(pool.v[:, dst]),
                                   np.asarray(pool.v[:, src]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fork_diverges_copy_on_write(seed):
+    """A forked row shares every parent block by reference; the first
+    decode write either side makes inside a shared block must go through
+    copy-on-write — the writer gets a private copy carrying the shared
+    bytes, the other side's view stays byte-identical."""
+    rng = random.Random(seed)
+    pool = PagedKVPool(CFG, n_rows=4, max_len=6 * BS, block_size=BS,
+                       n_blocks=12)
+    n_tok = rng.randint(2 * BS + 1, 3 * BS - 1)   # 3 blocks, last partial
+    toks = [rng.randint(0, 63) for _ in range(n_tok)]
+    parent, _ = pool.admit(toks)
+    pool._pos_np[parent] = n_tok
+    shared = pool.tables[parent].blocks[-1]       # the partial tail block
+    kval = rng.uniform(-8, 8)
+    pool.blocks.k = pool.blocks.k.at[:, shared].set(kval)
+
+    child = pool.fork(parent)
+    _check_invariants(pool)
+    assert pool.tables[child].blocks == pool.tables[parent].blocks
+    assert int(pool._pos_np[child]) == n_tok
+    assert pool.blocks.ref[shared] == 2
+
+    # child writes its next token inside the shared tail block
+    pool.prepare_decode([child], [1])
+    pool._pos_np[child] += 1
+    _check_invariants(pool)
+    priv = pool.tables[child].blocks[-1]
+    assert priv != shared, "child wrote into a block the parent references"
+    assert pool.tables[parent].blocks[-1] == shared
+    assert pool.blocks.ref[shared] == 1 and pool.blocks.ref[priv] == 1
+    np.testing.assert_array_equal(                # CoW carried the bytes
+        np.asarray(pool.blocks.k[:, priv]),
+        np.asarray(pool.blocks.k[:, shared]))
+
+    # parent's tail is private again: its own write must NOT copy
+    pool.prepare_decode([parent], [1])
+    pool._pos_np[parent] += 1
+    _check_invariants(pool)
+    assert pool.tables[parent].blocks[-1] == shared
+
+    # full-block growth past the fork point stays disjoint
+    pool.prepare_decode([child], [BS])
+    pool._pos_np[child] += BS
+    _check_invariants(pool)
+    assert set(pool.tables[child].blocks[3:]).isdisjoint(
+        pool.tables[parent].blocks)
+
+    pool.release(child)
+    _check_invariants(pool)
+    pool.release(parent)
+    _check_invariants(pool)
