@@ -1,7 +1,7 @@
 """Serving benchmark: continuous batching under Poisson arrivals,
 dense vs 8:16(+16:256 outlier) compressed weights, slot vs paged KV.
 
-Four scenarios:
+The scenarios:
 
 1. Poisson open-loop workload (exponential interarrival gaps) replayed
    through the ServingEngine for each (weights, kv_layout) combination;
@@ -33,6 +33,11 @@ Four scenarios:
    model-free n-gram proposer on the same trace.  Records acceptance
    rate, accepted tokens/step, tok/s speedup, and a token-identity
    cross-check of every greedy stream against the baseline.
+6. Equal-HBM KV dtype: bf16 vs int8 (+per-position scales) arenas sized
+   to the same byte budget.  int8 admits ~2*hd/(hd+4) more slots, so
+   under an oversubscribing burst it runs more requests concurrently;
+   greedy replays record the quantized arena's token agreement rate
+   against the bf16 reference.
 
 Every run also lands in a machine-readable ``BENCH_serving.json``
 (--out) so the perf trajectory is tracked across PRs, with a top-level
@@ -99,14 +104,16 @@ def _make_tracer(args, name: str):
 
 def _build_engine(cfg, params, args, kv_layout, *, n_slots=None,
                   max_len=None, n_blocks=None, token_budget=None,
-                  prefix_caching=True, trace_name="", draft=None):
+                  prefix_caching=True, trace_name="", draft=None,
+                  kv_dtype=None):
     from repro.launch.mesh import make_serving_mesh
     return ServingEngine(
         cfg, params, n_slots=n_slots or args.slots,
         max_len=max_len or args.max_len, max_queue=args.max_queue,
         token_budget=token_budget or args.token_budget,
         max_prefill_per_step=args.max_prefill_per_step,
-        kv_layout=kv_layout, block_size=args.block_size, n_blocks=n_blocks,
+        kv_layout=kv_layout, kv_dtype=kv_dtype or args.kv_dtype,
+        block_size=args.block_size, n_blocks=n_blocks,
         prefix_caching=prefix_caching, mesh=make_serving_mesh(args.mesh),
         draft=draft, tracer=_make_tracer(args, trace_name or kv_layout))
 
@@ -188,6 +195,75 @@ def shared_prefix_scenario(cfg, params, args) -> dict:
           f"prefix-cache hit tokens={hits}; "
           f"ttft p50 slot={s['ttft']['p50']*1e3:.0f}ms vs "
           f"paged={p['ttft']['p50']*1e3:.0f}ms")
+    return out
+
+
+def kv_dtype_scenario(cfg, params, args) -> dict:
+    """Equal-HBM-budget KV dtype comparison: bf16 vs int8 arenas sized to
+    the SAME byte budget.  An int8 token costs ``hd + 4`` bytes per KV
+    head (values + one f32 scale) against bf16's ``2*hd``, so the same
+    bytes admit ``2*hd/(hd+4)`` more slots (~1.88x at hd=64).  A burst of
+    more requests than either engine can hold measures admitted
+    concurrency directly; greedy replays of the same trace measure
+    per-token agreement of the quantized arena against the bf16
+    reference."""
+    import numpy as np
+    rng = np.random.default_rng(args.seed + 9)
+    hd = cfg.head_dim
+    bf16_slots = args.kv_dtype_slots
+    int8_slots = (bf16_slots * 2 * hd) // (hd + 4)
+    n = int8_slots + 4                 # oversubscribe both engines
+    plen = max(args.prompt_min, 4)
+    trace = [TraceRequest(arrival_s=0.0005 * i,
+                          prompt=rng.integers(0, cfg.vocab,
+                                              size=plen).tolist(),
+                          max_new_tokens=args.gen, seed=i)
+             for i in range(n)]
+
+    out = {"head_dim": hd, "bf16_slots": bf16_slots,
+           "int8_slots": int8_slots, "n_requests": n, "gen": args.gen}
+    toks = {}
+    for dtype, slots in (("bf16", bf16_slots), ("int8", int8_slots)):
+        engine = _build_engine(cfg, params, args, "slot", n_slots=slots,
+                               kv_dtype=dtype, trace_name=f"kv/{dtype}")
+        for t in trace:                # warm: compile every shape
+            while True:
+                try:
+                    engine.submit(t.prompt, t.sampling())
+                    break
+                except QueueFull:
+                    engine.step()
+        engine.run()
+        engine.finished.clear()
+        engine.reset_stats()
+        res = replay(engine, trace, time_scale=args.time_scale)
+        summary = summarize([r.metrics for r in res["finished"]],
+                            res["wall_s"])
+        summary["rejected"] = res["rejected"]
+        summary.update(engine.stats())
+        toks[dtype] = {r.request_id: list(r.tokens)
+                       for r in res["finished"]}
+        print(format_summary(f"kv/{dtype}", summary))
+        out[dtype] = summary
+
+    # greedy agreement: positionwise match rate of int8 streams vs the
+    # bf16 reference streams for the same requests
+    matched = total = 0
+    for rid, ref in toks["bf16"].items():
+        got = toks["int8"].get(rid, [])
+        total += len(ref)
+        matched += sum(a == b for a, b in zip(ref, got))
+    b16, i8 = out["bf16"], out["int8"]
+    out["greedy_agreement"] = matched / total if total else 1.0
+    out["concurrency_ratio"] = (i8["max_running"]
+                                / max(b16["max_running"], 1))
+    out["bf16_arena_bytes"] = b16["pool"]["arena_bytes"]
+    out["int8_arena_bytes"] = i8["pool"]["arena_bytes"]
+    print(f"kv-dtype @ equal HBM: int8 admits {i8['max_running']} vs "
+          f"bf16 {b16['max_running']} concurrent "
+          f"({out['concurrency_ratio']:.2f}x) at "
+          f"{out['int8_arena_bytes']}/{out['bf16_arena_bytes']} arena "
+          f"bytes; greedy agreement {out['greedy_agreement']:.3f}")
     return out
 
 
@@ -558,6 +634,9 @@ def main(argv=None):
     ap.add_argument("--time-scale", type=float, default=1.0)
     ap.add_argument("--kv-layout", default="both",
                     choices=("slot", "paged", "both"))
+    ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"),
+                    help="KV arena storage dtype for the main grid engines "
+                         "(the kv-dtype scenario always runs both)")
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--mesh", default=None,
                     help="serving mesh 'DATAxMODEL' (e.g. '1x8') — "
@@ -575,6 +654,12 @@ def main(argv=None):
     ap.add_argument("--kv-budget-tokens", type=int, default=None,
                     help="KV budget for the shared-prefix comparison "
                          "(default: slots * max_len)")
+    # equal-HBM-budget KV dtype scenario
+    ap.add_argument("--no-kv-dtype", action="store_true",
+                    help="skip the equal-HBM bf16-vs-int8 KV scenario")
+    ap.add_argument("--kv-dtype-slots", type=int, default=8,
+                    help="bf16 slot count of the equal-HBM comparison; the "
+                         "int8 engine gets the same bytes' worth of slots")
     # long-prompt chunked-prefill scenario
     ap.add_argument("--no-long-prompt", action="store_true",
                     help="skip the long-prompt chunked-prefill scenario")
@@ -665,6 +750,10 @@ def main(argv=None):
     if not args.no_shared_prefix:
         shared = shared_prefix_scenario(cfg, params, args)
 
+    kv_dtype = None
+    if not args.no_kv_dtype:
+        kv_dtype = kv_dtype_scenario(cfg, params, args)
+
     long_prompt = None
     if not args.no_long_prompt:
         long_prompt = long_prompt_scenario(cfg, params, args)
@@ -688,6 +777,7 @@ def main(argv=None):
                      "rate_per_s": args.rate, "gen": args.gen,
                      "slots": args.slots, "max_len": args.max_len,
                      "block_size": args.block_size,
+                     "kv_dtype": args.kv_dtype,
                      "token_budget": args.token_budget,
                      "weight_pattern": args.weight_pattern,
                      "outlier_pattern": args.outlier_pattern,
@@ -697,6 +787,7 @@ def main(argv=None):
                      "mesh": args.mesh},
             "poisson": results,
             "shared_prefix": shared,
+            "kv_dtype": kv_dtype,
             "long_prompt": long_prompt,
             "mixed_family": mixed_family,
             "speculative": speculative,
@@ -706,6 +797,9 @@ def main(argv=None):
         if shared:
             sections["shared_prefix/slot"] = shared.get("slot")
             sections["shared_prefix/paged"] = shared.get("paged")
+        if kv_dtype:
+            sections["kv_dtype/bf16"] = kv_dtype.get("bf16")
+            sections["kv_dtype/int8"] = kv_dtype.get("int8")
         if long_prompt:
             sections["long_prompt/oneshot"] = long_prompt.get("oneshot")
             sections["long_prompt/chunked"] = long_prompt.get("chunked")

@@ -47,15 +47,41 @@ def _kernel(x_ref, v_ref, meta_ref, ov_ref, ometa_ref, o_ref, acc_ref,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kernel_int8(x_ref, v_ref, meta_ref, ov_ref, ometa_ref, s_ref, o_ref,
+                 acc_ref, *, n, m, o_n, n_k):
+    """int8 N:M values dequantized in-register by the per-out-row scale;
+    outliers stay exact bf16 and are added AFTER the scale — only the N:M
+    stream is quantized (models/sparse_serving.py keeps outliers exact)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decompress_tile(v_ref[...], meta_ref[...], n, m, jnp.float32)
+    w = w * s_ref[...]                                 # [bO, bK] * [bO, 1]
+    w += _decompress_outlier_tile(ov_ref[...], ometa_ref[...], o_n, jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "m", "o_n", "block_b",
                                              "block_o", "block_k", "interpret"))
 def fused_sparse_linear(x: jax.Array, nm_values: jax.Array, nm_meta: jax.Array,
                         o_values: jax.Array, o_meta: jax.Array, *,
                         n: int, m: int, o_n: int,
+                        scale: jax.Array | None = None,
                         block_b: int = 128, block_o: int = 128,
                         block_k: int = 512, interpret: bool = True) -> jax.Array:
     """x: [b, in]; nm_values: [out, in*n//m]; nm_meta: [out, in//m] int32;
-    o_values: [out, in//256, o_n]; o_meta: [out, in//256, o_n//4] int32."""
+    o_values: [out, in//256, o_n]; o_meta: [out, in//256, o_n//4] int32.
+    ``scale`` [out] f32 dequantizes int8 nm_values in-register (outliers are
+    stored exact and added unscaled); None for bf16 values."""
     b, kdim = x.shape
     out = nm_values.shape[0]
     assert kdim % OUTLIER_M == 0 and kdim % m == 0
@@ -68,18 +94,27 @@ def fused_sparse_linear(x: jax.Array, nm_values: jax.Array, nm_meta: jax.Array,
     nc = bk // OUTLIER_M
 
     grid = (b // bb, out // bo, n_k)
+    in_specs = [
+        pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bo, bk // m * n), lambda i, j, k: (j, k)),
+        pl.BlockSpec((bo, bk // m), lambda i, j, k: (j, k)),
+        pl.BlockSpec((bo, nc, o_n), lambda i, j, k: (j, k, 0)),
+        pl.BlockSpec((bo, nc, o_n // 4), lambda i, j, k: (j, k, 0)),
+    ]
+    operands = [x, nm_values, nm_meta, o_values, o_meta]
+    if scale is None:
+        kernel = functools.partial(_kernel, n=n, m=m, o_n=o_n, n_k=n_k)
+    else:
+        assert scale.shape == (out,)
+        kernel = functools.partial(_kernel_int8, n=n, m=m, o_n=o_n, n_k=n_k)
+        in_specs.append(pl.BlockSpec((bo, 1), lambda i, j, k: (j, 0)))
+        operands.append(scale.astype(jnp.float32).reshape(out, 1))
     return pl.pallas_call(
-        functools.partial(_kernel, n=n, m=m, o_n=o_n, n_k=n_k),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bo, bk // m * n), lambda i, j, k: (j, k)),
-            pl.BlockSpec((bo, bk // m), lambda i, j, k: (j, k)),
-            pl.BlockSpec((bo, nc, o_n), lambda i, j, k: (j, k, 0)),
-            pl.BlockSpec((bo, nc, o_n // 4), lambda i, j, k: (j, k, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, bo), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, out), x.dtype),
         scratch_shapes=[pltpu.VMEM((bb, bo), jnp.float32)],
         interpret=interpret,
-    )(x, nm_values, nm_meta, o_values, o_meta)
+    )(*operands)

@@ -60,14 +60,38 @@ def _kernel(x_ref, v_ref, meta_ref, o_ref, acc_ref, *, n, m, n_k):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kernel_int8(x_ref, v_ref, meta_ref, s_ref, o_ref, acc_ref, *, n, m, n_k):
+    """int8 variant: values stream compressed AND quantized; the per-out-row
+    f32 scale dequantizes the decompressed tile in-register on the VPU —
+    no bf16 weight copy ever touches HBM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decompress_tile(v_ref[...], meta_ref[...], n, m, jnp.float32)
+    w = w * s_ref[...]                                 # [bO, bK] * [bO, 1]
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "m", "block_b", "block_o",
                                              "block_k", "interpret"))
 def nm_spmm(x: jax.Array, values: jax.Array, meta: jax.Array, *,
-            n: int, m: int, block_b: int = 128, block_o: int = 128,
+            n: int, m: int, scale: jax.Array | None = None,
+            block_b: int = 128, block_o: int = 128,
             block_k: int = 512, interpret: bool = True) -> jax.Array:
     """y[b, out] = x[b, in] @ decompress(values, meta)^T.
 
     x: [batch, in]; values: [out, in*n//m]; meta: [out, in//m] int32.
+    ``scale`` [out] f32 dequantizes int8 values in-register after the
+    decompress (per-out-row symmetric quantization); None for bf16 values.
     Requires batch % block_b == in % block_k == out % block_o == 0 after
     clamping (tiles are clamped to the array sizes for small shapes).
     """
@@ -83,16 +107,25 @@ def nm_spmm(x: jax.Array, values: jax.Array, meta: jax.Array, *,
     n_k = kdim // bk
 
     grid = (b // bb, out // bo, n_k)
+    in_specs = [
+        pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bo, bk // m * n), lambda i, j, k: (j, k)),
+        pl.BlockSpec((bo, bk // m), lambda i, j, k: (j, k)),
+    ]
+    operands = [x, values, meta]
+    if scale is None:
+        kernel = functools.partial(_kernel, n=n, m=m, n_k=n_k)
+    else:
+        assert scale.shape == (out,)
+        kernel = functools.partial(_kernel_int8, n=n, m=m, n_k=n_k)
+        in_specs.append(pl.BlockSpec((bo, 1), lambda i, j, k: (j, 0)))
+        operands.append(scale.astype(jnp.float32).reshape(out, 1))
     return pl.pallas_call(
-        functools.partial(_kernel, n=n, m=m, n_k=n_k),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bo, bk // m * n), lambda i, j, k: (j, k)),
-            pl.BlockSpec((bo, bk // m), lambda i, j, k: (j, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, bo), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, out), x.dtype),
         scratch_shapes=[pltpu.VMEM((bb, bo), jnp.float32)],
         interpret=interpret,
-    )(x, values, meta)
+    )(*operands)

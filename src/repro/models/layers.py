@@ -146,7 +146,8 @@ def sdpa(q, k, v, *, causal: bool = True, window: int | None = None,
 
 
 def attend_length_masked(q, k_cache, v_cache, q_offset, *,
-                         window: int | None = None) -> jax.Array:
+                         window: int | None = None,
+                         k_scale=None, v_scale=None) -> jax.Array:
     """Length-masked attention over statically-sized caches: the serving
     in-place attention for contiguous (slot) KV buffers.
 
@@ -159,11 +160,18 @@ def attend_length_masked(q, k_cache, v_cache, q_offset, *,
     writes, allocation padding — is masked with a finite ``-1e30`` whose
     exp underflows to exactly 0.0, so masked garbage contributes nothing.
 
+    ``k_scale``/``v_scale`` [B,T,KV] dequantize int8 caches on the fly:
+    the multiply fuses into the f32 upcast the einsums already do, so the
+    int8 arena is the only KV ever read from HBM — no bf16 copy.
+
     S=1 with ``q_offset = filled_len - 1`` is classic decode attention;
     S>1 with ``q_offset = prefill cursor`` is an in-place prefill chunk.
     """
     from ..parallel import policy as pol
     B, S, H, hd = q.shape
+    if k_scale is not None:
+        k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
     k = _repeat_kv(k_cache, H)
     v = _repeat_kv(v_cache, H)
     qf = q.astype(jnp.float32) / math.sqrt(hd)

@@ -95,25 +95,21 @@ def sparse_apply(sw: SparseWeight, x: jax.Array) -> jax.Array:
 
 
 def sparse_apply_pallas(sw: SparseWeight, x: jax.Array) -> jax.Array:
-    """TPU path: fused Pallas kernel on the packed buffers."""
+    """TPU path: fused Pallas kernel on the packed buffers.  int8 values
+    stream quantized all the way into VMEM; the per-row scale rides as a
+    kernel operand and dequantizes in-register after the gather."""
     from ..kernels.fused_sparse_linear import fused_sparse_linear
     from ..kernels.nm_spmm import nm_spmm
-    if sw.v_scale is not None:
-        # int8 values: dequantize row-wise before the kernel (a fused int8
-        # kernel variant is a straightforward extension — values are read
-        # once per tile and scaled on the VPU).
-        sw = dataclasses.replace(
-            sw, nm_values=(sw.nm_values.astype(jnp.float32)
-                           * sw.v_scale[..., None]).astype(x.dtype),
-            v_scale=None)
+    scale = None if sw.v_scale is None else sw.v_scale.astype(jnp.float32)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, sw.in_dim)
     if sw.o_values is None:
         y = nm_spmm(x2, sw.nm_values, sw.nm_meta, n=sw.n, m=sw.m,
-                    interpret=jax.default_backend() != "tpu")
+                    scale=scale, interpret=jax.default_backend() != "tpu")
     else:
         y = fused_sparse_linear(x2, sw.nm_values, sw.nm_meta, sw.o_values,
                                 sw.o_meta, n=sw.n, m=sw.m, o_n=sw.o_n,
+                                scale=scale,
                                 interpret=jax.default_backend() != "tpu")
     return y.reshape(*lead, -1)
 

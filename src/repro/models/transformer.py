@@ -215,27 +215,47 @@ def attend_over_pool(q, pool_view, *, cursor=None, q_offset=None,
         from ..serving.paged.paged_attention import paged_attention
         return paged_attention(q, pool_view.k, pool_view.v,
                                pool_view.block_tables, q_offset,
-                               window=window, backend=backend)
+                               window=window, backend=backend,
+                               k_scale=pool_view.k_scale,
+                               v_scale=pool_view.v_scale)
     k_rows, v_rows = pool_view.lane_kv(pool_view.k, pool_view.v)
-    return attend_length_masked(q, k_rows, v_rows, q_offset, window=window)
+    ks = vs = None
+    if pool_view.k_scale is not None:
+        ks, vs = pool_view.lane_kv(pool_view.k_scale, pool_view.v_scale)
+    return attend_length_masked(q, k_rows, v_rows, q_offset, window=window,
+                                k_scale=ks, v_scale=vs)
 
 
-def _block_step(lp, x, k_l, v_l, view, positions, cfg, attn_backend):
+def _block_step(lp, x, k_l, v_l, view, positions, cfg, attn_backend,
+                ks_l=None, vs_l=None):
     """One block of the unified step: project q/k/v at the lane cursor
     positions, scatter the fresh KV into the layer's arena slice (in
     place under donation), and attend over the pool.  Returns
-    (y, k_l, v_l) with the updated arena slices."""
+    (y, k_l, v_l[, ks_l, vs_l]) with the updated arena slices.  With
+    scale slices (int8 arena) the fresh KV is quantized on scatter and
+    attention dequantizes in place — the quantized path's extra state
+    is just the two [.., KV] scale slices riding alongside."""
     from ..parallel import policy as pol
     B, S, _ = x.shape
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
     q, k, v = _project_qkv(lp, h, cfg, positions)
     q = pol.shard(q, ("fsdp", None, "model", None))
-    k_l, v_l = view.write_layer(k_l, v_l, k, v)
-    attn = attend_over_pool(q, dataclasses.replace(view, k=k_l, v=v_l),
-                            window=cfg.window, backend=attn_backend)
+    if ks_l is not None:
+        k_l, v_l, ks_l, vs_l = view.write_layer_quantized(
+            k_l, v_l, ks_l, vs_l, k, v)
+        attn = attend_over_pool(
+            q, dataclasses.replace(view, k=k_l, v=v_l, k_scale=ks_l,
+                                   v_scale=vs_l),
+            window=cfg.window, backend=attn_backend)
+    else:
+        k_l, v_l = view.write_layer(k_l, v_l, k, v)
+        attn = attend_over_pool(q, dataclasses.replace(view, k=k_l, v=v_l),
+                                window=cfg.window, backend=attn_backend)
     x = x + linear(lp["wo"], attn.reshape(B, S, -1))
     h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
     x = x + _mlp(lp, h, cfg)
+    if ks_l is not None:
+        return x, k_l, v_l, ks_l, vs_l
     return x, k_l, v_l
 
 
@@ -254,7 +274,10 @@ def unified_step(params, view, batch, cfg, *, attn_backend=None,
     chunked prefill (numerically the one-shot prefill it replaces), and
     S = 1 over all lanes is the fused decode.
 
-    Returns (logits [B, S, V], (k, v)) — the updated [L, ...] arenas.
+    Returns (logits [B, S, V], (k, v)) — the updated [L, ...] arenas —
+    or (logits, (k, v, k_scale, v_scale)) when the view carries an int8
+    arena's scale tensors (they join the per-layer scan as two more
+    donated-through leaves).
     """
     from ..parallel import policy as pol
     tokens = batch["tokens"]
@@ -262,16 +285,36 @@ def unified_step(params, view, batch, cfg, *, attn_backend=None,
     x = jnp.take(params["embed"], tokens, axis=0)
     positions = _pool_positions(view.cursor, S, cfg)
     x = pol.shard(x, ("fsdp", None, None))
+    quantized = view.k_scale is not None
 
     if unroll:
-        ks, vs = [], []
+        ks, vs, kss, vss = [], [], [], []
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda p: p[i], params["layers"])
-            x, k_l, v_l = _block_step(lp, x, view.k[i], view.v[i], view,
-                                      positions, cfg, attn_backend)
+            if quantized:
+                x, k_l, v_l, ks_l, vs_l = _block_step(
+                    lp, x, view.k[i], view.v[i], view, positions, cfg,
+                    attn_backend, view.k_scale[i], view.v_scale[i])
+                kss.append(ks_l)
+                vss.append(vs_l)
+            else:
+                x, k_l, v_l = _block_step(lp, x, view.k[i], view.v[i], view,
+                                          positions, cfg, attn_backend)
             ks.append(k_l)
             vs.append(v_l)
         k, v = jnp.stack(ks), jnp.stack(vs)
+        if quantized:
+            ksc, vsc = jnp.stack(kss), jnp.stack(vss)
+    elif quantized:
+        def body(h, xs):
+            lp, k_l, v_l, ks_l, vs_l = xs
+            h, k_l, v_l, ks_l, vs_l = _block_step(
+                lp, h, k_l, v_l, view, positions, cfg, attn_backend,
+                ks_l, vs_l)
+            return h, (k_l, v_l, ks_l, vs_l)
+        x, (k, v, ksc, vsc) = jax.lax.scan(
+            body, x, (params["layers"], view.k, view.v, view.k_scale,
+                      view.v_scale))
     else:
         def body(h, xs):
             lp, k_l, v_l = xs
@@ -283,6 +326,8 @@ def unified_step(params, view, batch, cfg, *, attn_backend=None,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = pol.shard(linear(head, x), ("fsdp", None, "model"))
+    if quantized:
+        return logits, (k, v, ksc, vsc)
     return logits, (k, v)
 
 

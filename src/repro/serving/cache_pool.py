@@ -48,6 +48,43 @@ class CapacityError(CachePoolError):
     """A write or admission exceeded what the pool can physically hold."""
 
 
+KV_DTYPES = ("bf16", "int8")
+
+
+def quantize_kv(fresh):
+    """Symmetric per-position per-KV-head int8 quantization of fresh KV
+    [..., KV, hd]: absmax over the head dim -> int8 values + f32 scales
+    [..., KV].  Scale granularity matches the scatter granularity — each
+    written position carries its own scale, so incremental chunk/decode
+    writes, copy-on-write and prefix sharing never have to re-quantize
+    neighbours.  All-zero positions (padding, fresh arenas) get scale 1.0
+    so dequantization is always well-defined."""
+    f = fresh.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(f), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(f / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def arena_nbytes(*arrays) -> int:
+    """Total device bytes of the given arenas (None entries skipped)."""
+    return sum(a.size * a.dtype.itemsize for a in arrays if a is not None)
+
+
+def _flat_scatter(flat_idx, n_rows: int, n_vals: int):
+    """Scatter closure over a flattened arena: works for value arenas
+    ([rows, KV, hd] trailing dims) and scale arenas ([rows, KV]) alike —
+    the same indices route both, which is what keeps scales glued to
+    their positions through every write path."""
+    def scat(arena, vals):
+        flat = arena.reshape(n_rows, *arena.shape[2:])
+        flat = flat.at[flat_idx].set(
+            vals.reshape(n_vals, *vals.shape[2:]).astype(arena.dtype),
+            mode="drop")
+        return flat.reshape(arena.shape)
+    return scat
+
+
 @runtime_checkable
 class KVCachePool(Protocol):
     """What the engine requires of a KV layout.
@@ -97,12 +134,20 @@ class SlotPoolView:
     of this step's S token positions are real for the lane (the rest are
     bucket padding: their writes are dropped and their queries' outputs
     discarded by the engine).
+
+    ``k_scale``/``v_scale`` ([L, n_slots, max_len, KV] f32, or None for
+    bf16 arenas) are the per-position dequantization scales of an int8
+    arena; they ride the view through the jitted step exactly like the
+    arenas (donated in, scattered in place, adopted out) and share the
+    arenas' flat write indices.
     """
     k: Any
     v: Any
     rows: Any | None
     cursor: Any
     n_new: Any
+    k_scale: Any | None = None
+    v_scale: Any | None = None
 
     @property
     def block_tables(self):
@@ -117,6 +162,16 @@ class SlotPoolView:
             return k_l, v_l
         return k_l[self.rows], v_l[self.rows]
 
+    def _flat_write_idx(self, ns, ml, S):
+        """Flat (slot*max_len + pos) scatter index per (lane, i) pair;
+        padding/overflow maps to ns*ml (one past the arena) and drops."""
+        rows = jnp.arange(ns) if self.rows is None else self.rows
+        p = self.cursor[:, None] + jnp.arange(S)[None]        # [B,S]
+        oob = ns * ml
+        flat_idx = rows[:, None] * ml + p
+        valid = (jnp.arange(S)[None] < self.n_new[:, None]) & (p < ml)
+        return jnp.where(valid, flat_idx, oob).reshape(-1)
+
     def write_layer(self, k_l, v_l, fresh_k, fresh_v):
         """Scatter fresh [B, S, KV, hd] KV into one layer's arena slice at
         each lane's cursor, in place under donation.  Real (lane, i<n_new)
@@ -125,31 +180,45 @@ class SlotPoolView:
         scatter depends only on (B, S)."""
         ns, ml = k_l.shape[0], k_l.shape[1]
         B, S = fresh_k.shape[:2]
-        rows = jnp.arange(ns) if self.rows is None else self.rows
-        p = self.cursor[:, None] + jnp.arange(S)[None]        # [B,S]
-        oob = ns * ml
-        flat_idx = rows[:, None] * ml + p
-        valid = (jnp.arange(S)[None] < self.n_new[:, None]) & (p < ml)
-        flat_idx = jnp.where(valid, flat_idx, oob).reshape(-1)
-        def scat(arena, vals):
-            flat = arena.reshape(ns * ml, *arena.shape[2:])
-            flat = flat.at[flat_idx].set(
-                vals.reshape(B * S, *vals.shape[2:]).astype(arena.dtype),
-                mode="drop")
-            return flat.reshape(arena.shape)
+        flat_idx = self._flat_write_idx(ns, ml, S)
+        scat = _flat_scatter(flat_idx, ns * ml, B * S)
         return scat(k_l, fresh_k), scat(v_l, fresh_v)
+
+    def write_layer_quantized(self, k_l, v_l, ks_l, vs_l, fresh_k, fresh_v):
+        """Quantize-on-scatter: int8-quantize the fresh KV per position and
+        scatter values + scales with the SAME flat indices — the bf16
+        projections never touch HBM as an arena copy."""
+        ns, ml = k_l.shape[0], k_l.shape[1]
+        B, S = fresh_k.shape[:2]
+        flat_idx = self._flat_write_idx(ns, ml, S)
+        scat = _flat_scatter(flat_idx, ns * ml, B * S)
+        qk, sk = quantize_kv(fresh_k)
+        qv, sv = quantize_kv(fresh_v)
+        return scat(k_l, qk), scat(v_l, qv), scat(ks_l, sk), scat(vs_l, sv)
 
 
 class SlotKVPool:
-    def __init__(self, cfg, n_slots: int, max_len: int, placement=None):
+    def __init__(self, cfg, n_slots: int, max_len: int, placement=None,
+                 kv_dtype: str = "bf16"):
         from .placement import ServingPlacement
         pl = placement or ServingPlacement()
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                             f"not {kv_dtype!r}")
         L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         shape = (L, n_slots, max_len, KV, hd)
+        arena_dtype = jnp.int8 if kv_dtype == "int8" else cfg.dtype
         # arenas are committed to the placement's KV-head-sharded layout at
         # birth; the jitted steps then update them shard-local in place
-        self.k = pl.place_kv(jnp.zeros(shape, cfg.dtype))
-        self.v = pl.place_kv(jnp.zeros(shape, cfg.dtype))
+        self.k = pl.place_kv(jnp.zeros(shape, arena_dtype))
+        self.v = pl.place_kv(jnp.zeros(shape, arena_dtype))
+        if kv_dtype == "int8":
+            sshape = (L, n_slots, max_len, KV)
+            self.k_scale = pl.place_kv_scale(jnp.ones(sshape, jnp.float32))
+            self.v_scale = pl.place_kv_scale(jnp.ones(sshape, jnp.float32))
+        else:
+            self.k_scale = self.v_scale = None
+        self.kv_dtype = kv_dtype
         self.pos = pl.place_replicated(jnp.zeros((n_slots,), jnp.int32))
         self.n_slots = n_slots
         self.max_len = max_len
@@ -177,9 +246,15 @@ class SlotKVPool:
 
     def stats(self) -> dict:
         """Occupancy snapshot, shape-compatible with PagedKVPool.stats()
-        so benchmarks and the tracer's gauges read one surface."""
+        so benchmarks and the tracer's gauges read one surface.
+        ``arena_bytes`` is the full HBM bill — int8 values AND their f32
+        scales — so equal-budget comparisons are honest."""
+        scale_bytes = arena_nbytes(self.k_scale, self.v_scale)
         return {"layout": "slot", "n_slots": self.n_slots,
-                "n_free": self.n_free, "max_len": self.max_len}
+                "n_free": self.n_free, "max_len": self.max_len,
+                "kv_dtype": self.kv_dtype,
+                "arena_bytes": arena_nbytes(self.k, self.v) + scale_bytes,
+                "scale_bytes": scale_bytes}
 
     # ---------------------------------------------------------------- views
     def lane_rows(self, rows: list[int], n_rows_padded: int) -> np.ndarray:
@@ -196,11 +271,15 @@ class SlotKVPool:
                 f"exceeds slot capacity {self.max_len}")
 
     # ------------------------------------------------------------ lifecycle
-    def adopt(self, k, v) -> None:
+    def adopt(self, k, v, k_scale=None, v_scale=None) -> None:
         """Take ownership of a step's output arenas (the jitted step
-        donated the previous ones, so this is an in-place handoff)."""
+        donated the previous ones, so this is an in-place handoff).  An
+        int8 pool's scale arenas ride the same handoff."""
         self.k = k
         self.v = v
+        if k_scale is not None:
+            self.k_scale = k_scale
+            self.v_scale = v_scale
 
     def advance_prefill(self, rows: list[int], ends: list[int]) -> None:
         self.pos = self.pos.at[jnp.asarray(rows)].set(

@@ -140,7 +140,7 @@ class ServingEngine:
                  max_queue: int = 64, queue_timeout_s: float | None = None,
                  token_budget: int | None = None,
                  max_prefill_per_step: int | None = None,
-                 kv_layout: str = "slot",
+                 kv_layout: str = "slot", kv_dtype: str = "bf16",
                  block_size: int = 16, n_blocks: int | None = None,
                  prefix_caching: bool = True, lookahead_blocks: int = 1,
                  paged_attn_backend: str | None = None, mesh=None,
@@ -169,8 +169,10 @@ class ServingEngine:
             cfg, self.params, self.placement, psh, kv_layout=kv_layout,
             n_slots=n_slots, max_len=max_len, block_size=block_size,
             n_blocks=n_blocks, prefix_caching=prefix_caching,
-            paged_attn_backend=paged_attn_backend, max_ctx=max_ctx)
+            paged_attn_backend=paged_attn_backend, max_ctx=max_ctx,
+            kv_dtype=kv_dtype)
         self.kv_layout = kv_layout
+        self.kv_dtype = kv_dtype
         self.pool = self.adapter.pool
         # kept for introspection and the compiled-cost tests
         self._step_fn = self.adapter._step_fn
@@ -206,7 +208,8 @@ class ServingEngine:
                     "relies on the cursor hiding rejected positions, which "
                     "recurrent state cannot do")
             self.spec = Speculator(draft, cfg, self.placement,
-                                   n_slots=n_slots, max_len=max_len)
+                                   n_slots=n_slots, max_len=max_len,
+                                   kv_dtype=kv_dtype)
         self.n_spec_steps = 0
         self.n_drafted = 0
         self.n_accepted = 0
@@ -330,6 +333,7 @@ class ServingEngine:
                "n_preemptions": self.n_preemptions,
                "family": self.cfg.family,
                "kv_layout": self.kv_layout,
+               "kv_dtype": self.kv_dtype,
                "token_budget": self.token_budget,
                "placement": self.placement.describe()}
         pool_stats = getattr(self.pool, "stats", None)

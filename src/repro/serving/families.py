@@ -139,31 +139,67 @@ class FamilyAdapter:
 class TransformerAdapter(FamilyAdapter):
     def __init__(self, cfg, params, placement, psh, *, kv_layout, n_slots,
                  max_len, block_size, n_blocks, prefix_caching,
-                 paged_attn_backend):
+                 paged_attn_backend, kv_dtype: str = "bf16"):
         self.cfg, self.params, self.kv_layout = cfg, params, kv_layout
+        self.kv_dtype = kv_dtype
+        quant = kv_dtype == "int8"
+        self.quantized = quant
         if kv_layout == "paged":
             self.pool = PagedKVPool(cfg, n_slots, max_len,
                                     block_size=block_size, n_blocks=n_blocks,
                                     prefix_caching=prefix_caching,
-                                    placement=placement)
+                                    placement=placement, kv_dtype=kv_dtype)
         else:
-            self.pool = SlotKVPool(cfg, n_slots, max_len, placement=placement)
-        sh = placement.step_fn_shardings(psh, kv_layout)
+            self.pool = SlotKVPool(cfg, n_slots, max_len, placement=placement,
+                                   kv_dtype=kv_dtype)
+        sh = placement.step_fn_shardings(psh, kv_layout, kv_dtype)
+        # int8 arenas thread two scale tensors right after k/v through both
+        # jitted steps, donated alongside (quantize-on-scatter updates them
+        # in place); otherwise the signatures are the original ones
         if kv_layout == "paged":
             trash = self.pool.trash_block
+            if quant:
+                self._step_fn = _jit(
+                    placement,
+                    lambda p, k, v, ks, vs, bt, cur, nn, t: tfm.unified_step(
+                        p, PagedPoolView(k, v, bt, cur, nn, trash, ks, vs),
+                        {"tokens": t}, cfg, attn_backend=paged_attn_backend),
+                    donate=(1, 2, 3, 4), **sh["step"])
+                self._decode_fn = _jit(
+                    placement,
+                    lambda p, k, v, ks, vs, bt, pos, t: tfm.unified_step(
+                        p, PagedPoolView(k, v, bt, pos, jnp.ones_like(pos),
+                                         trash, ks, vs),
+                        {"tokens": t}, cfg, attn_backend=paged_attn_backend),
+                    donate=(1, 2, 3, 4), **sh["decode"])
+            else:
+                self._step_fn = _jit(
+                    placement,
+                    lambda p, k, v, bt, cur, nn, t: tfm.unified_step(
+                        p, PagedPoolView(k, v, bt, cur, nn, trash),
+                        {"tokens": t}, cfg, attn_backend=paged_attn_backend),
+                    donate=(1, 2), **sh["step"])
+                self._decode_fn = _jit(
+                    placement,
+                    lambda p, k, v, bt, pos, t: tfm.unified_step(
+                        p, PagedPoolView(k, v, bt, pos, jnp.ones_like(pos),
+                                         trash),
+                        {"tokens": t}, cfg, attn_backend=paged_attn_backend),
+                    donate=(1, 2), **sh["decode"])
+        elif quant:
             self._step_fn = _jit(
                 placement,
-                lambda p, k, v, bt, cur, nn, t: tfm.unified_step(
-                    p, PagedPoolView(k, v, bt, cur, nn, trash),
-                    {"tokens": t}, cfg, attn_backend=paged_attn_backend),
-                donate=(1, 2), **sh["step"])
+                lambda p, k, v, ks, vs, rows, cur, nn, t: tfm.unified_step(
+                    p, SlotPoolView(k, v, rows, cur, nn, ks, vs),
+                    {"tokens": t}, cfg),
+                donate=(1, 2, 3, 4), **sh["step"])
             self._decode_fn = _jit(
                 placement,
-                lambda p, k, v, bt, pos, t: tfm.unified_step(
-                    p, PagedPoolView(k, v, bt, pos, jnp.ones_like(pos),
-                                     trash),
-                    {"tokens": t}, cfg, attn_backend=paged_attn_backend),
-                donate=(1, 2), **sh["decode"])
+                lambda p, k, v, ks, vs, pos, t: tfm.unified_step(
+                    p, SlotPoolView(k, v, None, pos, jnp.ones_like(pos),
+                                    ks, vs),
+                    {"tokens": t}, cfg),
+                donate=(1, 2, 3, 4), **sh["decode"])
         else:
             self._step_fn = _jit(
                 placement,
@@ -178,26 +214,30 @@ class TransformerAdapter(FamilyAdapter):
                     {"tokens": t}, cfg),
                 donate=(1, 2), **sh["decode"])
 
+    def _arena_args(self):
+        p = self.pool
+        if self.quantized:
+            return (p.k, p.v, p.k_scale, p.v_scale)
+        return (p.k, p.v)
+
     def step_chunk(self, rows, lanes, cur, n_new, tokens):
-        logits, (k, v) = self._traced(
+        logits, arenas = self._traced(
             "step", self._step_fn,
-            (self.params, self.pool.k, self.pool.v, lanes, cur, n_new,
-             tokens))
-        self.pool.adopt(k, v)
+            (self.params, *self._arena_args(), lanes, cur, n_new, tokens))
+        self.pool.adopt(*arenas)
         return logits
 
     def step_decode(self, tokens, active):
         if self.kv_layout == "paged":
-            logits, (k, v) = self._traced(
+            logits, arenas = self._traced(
                 "decode", self._decode_fn,
-                (self.params, self.pool.k, self.pool.v,
+                (self.params, *self._arena_args(),
                  self.pool.block_tables, self.pool.pos, tokens))
         else:
-            logits, (k, v) = self._traced(
+            logits, arenas = self._traced(
                 "decode", self._decode_fn,
-                (self.params, self.pool.k, self.pool.v, self.pool.pos,
-                 tokens))
-        self.pool.adopt(k, v)
+                (self.params, *self._arena_args(), self.pool.pos, tokens))
+        self.pool.adopt(*arenas)
         return logits
 
 
@@ -527,20 +567,26 @@ class EncDecAdapter(FamilyAdapter):
 
 def build_adapter(cfg, params, placement, psh, *, kv_layout, n_slots,
                   max_len, block_size, n_blocks, prefix_caching,
-                  paged_attn_backend, max_ctx=None):
+                  paged_attn_backend, max_ctx=None, kv_dtype="bf16"):
     """The family's adapter, with its effective kv_layout resolved.
 
     ssm has no KV at all, so any requested layout coerces to "slot" (a
     layout over nothing); encdec pages neither its decoder slots nor its
-    read-only context rows and rejects "paged" explicitly.
+    read-only context rows and rejects "paged" explicitly.  Quantized KV
+    (``kv_dtype="int8"``) exists only for the pure KV-transformer
+    families — recurrent/hybrid/encdec state blobs stay at model dtype.
     """
     fam = cfg.family
+    if kv_dtype != "bf16" and fam not in ("dense", "moe"):
+        raise ValueError(
+            f"kv_dtype={kv_dtype!r} needs a KV-transformer family "
+            f"(dense/moe), not {fam!r}")
     if fam in ("dense", "moe"):
         return TransformerAdapter(
             cfg, params, placement, psh, kv_layout=kv_layout,
             n_slots=n_slots, max_len=max_len, block_size=block_size,
             n_blocks=n_blocks, prefix_caching=prefix_caching,
-            paged_attn_backend=paged_attn_backend)
+            paged_attn_backend=paged_attn_backend, kv_dtype=kv_dtype)
     if fam == "ssm":
         return RecurrentAdapter(cfg, params, placement, psh,
                                 n_slots=n_slots, max_len=max_len)

@@ -38,18 +38,34 @@ def _copy_block(arena, dst, src):
 
 
 class BlockPool:
-    def __init__(self, cfg, n_blocks: int, block_size: int, placement=None):
+    def __init__(self, cfg, n_blocks: int, block_size: int, placement=None,
+                 kv_dtype: str = "bf16"):
         if n_blocks < 1:
             raise ValueError("need at least one block")
+        from ..cache_pool import KV_DTYPES
         from ..placement import ServingPlacement
         pl = placement or ServingPlacement()
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                             f"not {kv_dtype!r}")
         L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         shape = (L, n_blocks, block_size, KV, hd)
+        arena_dtype = jnp.int8 if kv_dtype == "int8" else cfg.dtype
         # the one shared arena is committed KV-head-sharded on the serving
         # mesh (serving/placement.py); refcounts and the free list below are
         # host-side scheduling state and never shard
-        self.k = pl.place_kv(jnp.zeros(shape, cfg.dtype))
-        self.v = pl.place_kv(jnp.zeros(shape, cfg.dtype))
+        self.k = pl.place_kv(jnp.zeros(shape, arena_dtype))
+        self.v = pl.place_kv(jnp.zeros(shape, arena_dtype))
+        if kv_dtype == "int8":
+            # per-position dequant scales, blocked exactly like the values
+            # (blocks on axis 1) so every block operation — alloc, share,
+            # copy-on-write — moves scales with their block for free
+            sshape = (L, n_blocks, block_size, KV)
+            self.k_scale = pl.place_kv_scale(jnp.ones(sshape, jnp.float32))
+            self.v_scale = pl.place_kv_scale(jnp.ones(sshape, jnp.float32))
+        else:
+            self.k_scale = self.v_scale = None
+        self.kv_dtype = kv_dtype
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.ref = np.zeros((n_blocks,), np.int32)
@@ -68,10 +84,16 @@ class BlockPool:
 
     def occupancy(self) -> dict:
         """Arena occupancy snapshot for gauges/benchmarks: allocated vs
-        free blocks plus how many cache-held blocks are evictable."""
+        free blocks plus how many cache-held blocks are evictable, and the
+        full HBM bill (int8 values AND their f32 scales)."""
+        from ..cache_pool import arena_nbytes
+        scale_bytes = arena_nbytes(self.k_scale, self.v_scale)
         return {"n_blocks": self.n_blocks, "n_free": self.n_free,
                 "n_allocated": self.n_blocks - self.n_free,
-                "n_cached_idle": self.n_cached_idle}
+                "n_cached_idle": self.n_cached_idle,
+                "kv_dtype": self.kv_dtype,
+                "arena_bytes": arena_nbytes(self.k, self.v) + scale_bytes,
+                "scale_bytes": scale_bytes}
 
     def alloc(self) -> int:
         """Hand out a free block with refcount 1."""
@@ -120,5 +142,8 @@ class BlockPool:
         src_, dst_ = jnp.int32(block), jnp.int32(dst)
         self.k = _copy_block(self.k, dst_, src_)
         self.v = _copy_block(self.v, dst_, src_)
+        if self.k_scale is not None:
+            self.k_scale = _copy_block(self.k_scale, dst_, src_)
+            self.v_scale = _copy_block(self.v_scale, dst_, src_)
         self.decref(block)
         return dst

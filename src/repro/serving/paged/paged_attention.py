@@ -89,7 +89,8 @@ def _head_tile(H: int, KV: int, hd: int) -> int | None:
 # --------------------------------------------------------------------------
 
 def paged_attention_ref(q, k_arena, v_arena, block_tables, cursor,
-                        *, window: int | None = None) -> jax.Array:
+                        *, window: int | None = None,
+                        k_scale=None, v_scale=None) -> jax.Array:
     """q [B,S,H,hd]; arenas [n_blocks, bs, KV, hd]; block_tables [B, nb]
     int32; cursor [B] (tokens visible per row before this step's S fresh
     ones).  Returns [B,S,H,hd].
@@ -97,23 +98,37 @@ def paged_attention_ref(q, k_arena, v_arena, block_tables, cursor,
     A table maps sequence position ``p`` to gathered index ``p`` exactly,
     so after the gather this IS the contiguous length-masked attention —
     delegated to ``models/layers.attend_length_masked`` so the masking
-    rule lives in one place."""
+    rule lives in one place.  ``k_scale``/``v_scale`` [n_blocks, bs, KV]
+    are an int8 arena's per-position scales, gathered through the same
+    tables (XLA fuses gather + dequant — no bf16 arena copy)."""
     from ...models.layers import attend_length_masked
     B, S, H, hd = q.shape
     _, bs, KV, _ = k_arena.shape
     nb = block_tables.shape[1]
     k = k_arena[block_tables].reshape(B, nb * bs, KV, hd)
     v = v_arena[block_tables].reshape(B, nb * bs, KV, hd)
-    return attend_length_masked(q, k, v, cursor, window=window)
+    ks = vs = None
+    if k_scale is not None:
+        ks = k_scale[block_tables].reshape(B, nb * bs, KV)
+        vs = v_scale[block_tables].reshape(B, nb * bs, KV)
+    return attend_length_masked(q, k, v, cursor, window=window,
+                                k_scale=ks, v_scale=vs)
 
 
 # --------------------------------------------------------------------------
 # pallas kernel
 # --------------------------------------------------------------------------
 
-def _paged_attn_kernel(bt_ref, cur_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref, *, bs, nb, n_rep, window,
-                       head_tiled):
+def _paged_attn_kernel(bt_ref, cur_ref, q_ref, k_ref, v_ref, *refs,
+                       bs, nb, n_rep, window, head_tiled, quantized):
+    if quantized:
+        # int8 arenas: per-position scale tiles ride the same block-table
+        # index map as the KV tiles and dequantize in-register, inside the
+        # online softmax — the gathered bf16 KV never exists in HBM
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     if head_tiled:
         b, j = pl.program_id(0), pl.program_id(2)
     else:
@@ -129,6 +144,9 @@ def _paged_attn_kernel(bt_ref, cur_ref, q_ref, k_ref, v_ref, o_ref,
     qf = q_ref[0].astype(jnp.float32) / math.sqrt(hd)         # [S, Ht, hd]
     k = k_ref[0].astype(jnp.float32)                          # [bs, KVt, hd]
     v = v_ref[0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0][..., None]                          # [bs, KVt, 1]
+        v = v * vs_ref[0][..., None]
     if n_rep > 1:
         k = jnp.repeat(k, n_rep, axis=1)                      # [bs, Ht, hd]
         v = jnp.repeat(v, n_rep, axis=1)
@@ -162,16 +180,20 @@ def _paged_attn_kernel(bt_ref, cur_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_attention_pallas(q, k_arena, v_arena, block_tables, cursor,
                            *, window: int | None = None,
                            interpret: bool = True,
-                           head_tile: int | None = None) -> jax.Array:
+                           head_tile: int | None = None,
+                           k_scale=None, v_scale=None) -> jax.Array:
     """Same contract as ``paged_attention_ref``; one grid step per
     (row[, head tile], block), KV blocks DMA'd by table lookup via scalar
     prefetch.  ``head_tile`` = KV heads per grid tile (None: all heads in
     one tile) — the large-H*hd variant walks head tiles as a middle grid
-    axis so q/accumulator tiles stay VMEM-sized."""
+    axis so q/accumulator tiles stay VMEM-sized.  ``k_scale``/``v_scale``
+    [n_blocks, bs, KV] ride as two extra operands whose index map is the
+    same block-table lookup; the kernel dequantizes in-register."""
     B, S, H, hd = q.shape
     n_blocks, bs, KV, _ = k_arena.shape
     nb = block_tables.shape[1]
     n_rep = H // KV
+    quantized = k_scale is not None
 
     if head_tile is not None and (KV % head_tile or head_tile >= KV):
         raise ValueError(f"head_tile {head_tile} must divide and be "
@@ -180,12 +202,15 @@ def paged_attention_pallas(q, k_arena, v_arena, block_tables, cursor,
     ht = kvt * n_rep
     kern = functools.partial(_paged_attn_kernel, bs=bs, nb=nb, n_rep=n_rep,
                              window=window,
-                             head_tiled=head_tile is not None)
+                             head_tiled=head_tile is not None,
+                             quantized=quantized)
     if head_tile is None:
         grid = (B, nb)
         q_spec = pl.BlockSpec((1, S, H, hd), lambda b, j, bt, cu: (b, 0, 0, 0))
         kv_spec = pl.BlockSpec((1, bs, KV, hd),
                                lambda b, j, bt, cu: (bt[b, j], 0, 0, 0))
+        sc_spec = pl.BlockSpec((1, bs, KV),
+                               lambda b, j, bt, cu: (bt[b, j], 0, 0))
         o_spec = pl.BlockSpec((1, S, H, hd), lambda b, j, bt, cu: (b, 0, 0, 0))
     else:
         grid = (B, KV // kvt, nb)
@@ -193,13 +218,20 @@ def paged_attention_pallas(q, k_arena, v_arena, block_tables, cursor,
                               lambda b, h, j, bt, cu: (b, 0, h, 0))
         kv_spec = pl.BlockSpec((1, bs, kvt, hd),
                                lambda b, h, j, bt, cu: (bt[b, j], 0, h, 0))
+        sc_spec = pl.BlockSpec((1, bs, kvt),
+                               lambda b, h, j, bt, cu: (bt[b, j], 0, h))
         o_spec = pl.BlockSpec((1, S, ht, hd),
                               lambda b, h, j, bt, cu: (b, 0, h, 0))
 
+    in_specs = [q_spec, kv_spec, kv_spec]
+    operands = [q, k_arena, v_arena]
+    if quantized:
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # block tables, cursors
         grid=grid,
-        in_specs=[q_spec, kv_spec, kv_spec],
+        in_specs=in_specs,
         out_specs=o_spec,
         scratch_shapes=[
             pltpu.VMEM((ht, S), jnp.float32),     # running max
@@ -213,7 +245,7 @@ def paged_attention_pallas(q, k_arena, v_arena, block_tables, cursor,
         out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), cursor.astype(jnp.int32),
-      q, k_arena, v_arena)
+      *operands)
     return out
 
 
@@ -223,7 +255,8 @@ def paged_attention_pallas(q, k_arena, v_arena, block_tables, cursor,
 
 def paged_attention(q, k_arena, v_arena, block_tables, cursor, *,
                     window: int | None = None,
-                    backend: str | None = None) -> jax.Array:
+                    backend: str | None = None,
+                    k_scale=None, v_scale=None) -> jax.Array:
     backend = backend or _default_backend()
     if backend == "pallas":
         H, hd = q.shape[2], q.shape[3]
@@ -231,6 +264,8 @@ def paged_attention(q, k_arena, v_arena, block_tables, cursor, *,
         return paged_attention_pallas(
             q, k_arena, v_arena, block_tables, cursor, window=window,
             interpret=jax.default_backend() != "tpu",
-            head_tile=_head_tile(H, KV, hd))
+            head_tile=_head_tile(H, KV, hd),
+            k_scale=k_scale, v_scale=v_scale)
     return paged_attention_ref(q, k_arena, v_arena, block_tables, cursor,
-                               window=window)
+                               window=window, k_scale=k_scale,
+                               v_scale=v_scale)

@@ -64,6 +64,11 @@ class PagedPoolView:
     scan.  ``block_tables`` [B, nb] maps each lane's sequence position p
     to physical block ``bt[b, p // block_size]`` (padding lanes carry
     all-trash tables).  ``cursor``/``n_new`` as in ``SlotPoolView``.
+
+    ``k_scale``/``v_scale`` ([L, n_blocks, block_size, KV] f32, or None
+    for bf16 arenas) are an int8 arena's per-position dequant scales; they
+    are addressed through the SAME block tables as the values, so prefix
+    sharing, copy-on-write and fork carry them implicitly.
     """
     k: Any
     v: Any
@@ -71,8 +76,22 @@ class PagedPoolView:
     cursor: Any
     n_new: Any
     trash: int = 0
+    k_scale: Any | None = None
+    v_scale: Any | None = None
 
     rows = None                           # duck-type marker: paged layout
+
+    def _write_slots(self, bs, S):
+        """Flat (block*block_size + offset) scatter index per (lane, i);
+        padding routes to the trash block."""
+        nb = self.block_tables.shape[1]
+        p = self.cursor[:, None] + jnp.arange(S)[None]        # [B,S]
+        bi = p // bs
+        blk = jnp.take_along_axis(self.block_tables,
+                                  jnp.clip(bi, 0, nb - 1), axis=1)
+        slot = blk * bs + p % bs
+        valid = (jnp.arange(S)[None] < self.n_new[:, None]) & (bi < nb)
+        return jnp.where(valid, slot, self.trash * bs).reshape(-1)
 
     def write_layer(self, k_l, v_l, fresh_k, fresh_v):
         """Scatter fresh [B, S, KV, hd] KV through the block tables at
@@ -82,14 +101,7 @@ class PagedPoolView:
         the compiled scatter depends only on (B, S)."""
         bs = k_l.shape[1]
         B, S = fresh_k.shape[:2]
-        nb = self.block_tables.shape[1]
-        p = self.cursor[:, None] + jnp.arange(S)[None]        # [B,S]
-        bi = p // bs
-        blk = jnp.take_along_axis(self.block_tables,
-                                  jnp.clip(bi, 0, nb - 1), axis=1)
-        slot = blk * bs + p % bs
-        valid = (jnp.arange(S)[None] < self.n_new[:, None]) & (bi < nb)
-        slot = jnp.where(valid, slot, self.trash * bs).reshape(-1)
+        slot = self._write_slots(bs, S)
         def scat(arena, vals):
             nblk = arena.shape[0]
             flat = arena.reshape(nblk * bs, *arena.shape[2:])
@@ -98,18 +110,39 @@ class PagedPoolView:
             return flat.reshape(arena.shape)
         return scat(k_l, fresh_k), scat(v_l, fresh_v)
 
+    def write_layer_quantized(self, k_l, v_l, ks_l, vs_l, fresh_k, fresh_v):
+        """Quantize-on-scatter: int8-quantize fresh KV per position and
+        route values + scales through the same table-derived slots (the
+        bf16 projections never land in HBM as an arena copy)."""
+        from ..cache_pool import quantize_kv
+        bs = k_l.shape[1]
+        B, S = fresh_k.shape[:2]
+        slot = self._write_slots(bs, S)
+        def scat(arena, vals):
+            nblk = arena.shape[0]
+            flat = arena.reshape(nblk * bs, *arena.shape[2:])
+            flat = flat.at[slot].set(
+                vals.reshape(B * S, *vals.shape[2:]).astype(arena.dtype))
+            return flat.reshape(arena.shape)
+        qk, sk = quantize_kv(fresh_k)
+        qv, sv = quantize_kv(fresh_v)
+        return scat(k_l, qk), scat(v_l, qv), scat(ks_l, sk), scat(vs_l, sv)
+
 
 class PagedKVPool:
     def __init__(self, cfg, n_rows: int, max_len: int, *,
                  block_size: int = 16, n_blocks: int | None = None,
-                 prefix_caching: bool = True, placement=None):
+                 prefix_caching: bool = True, placement=None,
+                 kv_dtype: str = "bf16"):
         self.block_size = block_size
         self.max_blocks_per_row = blocks_needed(max_len, block_size)
         if n_blocks is None:
             # same HBM as a SlotKVPool(n_rows, max_len) reservation
             n_blocks = n_rows * self.max_blocks_per_row
         self.blocks = BlockPool(cfg, n_blocks + 1, block_size,
-                                placement=placement)          # +1 trash
+                                placement=placement,
+                                kv_dtype=kv_dtype)            # +1 trash
+        self.kv_dtype = kv_dtype
         self._trash = self.blocks.alloc()                       # permanent
         self.n_blocks = n_blocks                                # usable
         self.n_rows = n_rows
@@ -133,6 +166,14 @@ class PagedKVPool:
     @property
     def v(self):
         return self.blocks.v
+
+    @property
+    def k_scale(self):
+        return self.blocks.k_scale
+
+    @property
+    def v_scale(self):
+        return self.blocks.v_scale
 
     @property
     def pos(self):
@@ -357,10 +398,13 @@ class PagedKVPool:
         return new
 
     # --------------------------------------------------------- lifecycle
-    def adopt(self, k, v) -> None:
+    def adopt(self, k, v, k_scale=None, v_scale=None) -> None:
         """Take ownership of a step's output arenas (donated in place)."""
         self.blocks.k = k
         self.blocks.v = v
+        if k_scale is not None:
+            self.blocks.k_scale = k_scale
+            self.blocks.v_scale = v_scale
 
     def advance_prefill(self, rows: list[int], ends: list[int]) -> None:
         for row, end in zip(rows, ends):
@@ -391,10 +435,14 @@ class PagedKVPool:
         self._free_rows.append(row)
 
     def stats(self) -> dict:
+        occ = self.blocks.occupancy()
         out = {"layout": "paged", "n_blocks": self.n_blocks,
                "block_size": self.block_size,
                "free_blocks": self.blocks.n_free,
-               "occupancy": self.blocks.occupancy(),
+               "occupancy": occ,
+               "kv_dtype": self.kv_dtype,
+               "arena_bytes": occ["arena_bytes"],
+               "scale_bytes": occ["scale_bytes"],
                "n_preemptions": self.n_preemptions}
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()

@@ -118,6 +118,18 @@ class ServingPlacement:
             else None
         return NamedSharding(self.mesh, P(None, None, None, axes, None))
 
+    @property
+    def kv_scale(self) -> NamedSharding | None:
+        """One spec for every ``[L, X, tokens, KV]`` int8-arena scale
+        tensor: co-sharded with the arena's KV-head dim (same axis rule as
+        ``kv``, one fewer trailing dim), so quantize-on-scatter and the
+        in-kernel dequant both stay shard-local."""
+        if not self.active:
+            return None
+        axes = "model" if self.cfg.n_kv_heads % self.mesh.shape["model"] == 0 \
+            else None
+        return NamedSharding(self.mesh, P(None, None, None, axes))
+
     def state_spec(self, shape) -> P:
         """Spec for one recurrent-state arena leaf ``[slots, H, ...]``.
 
@@ -193,7 +205,8 @@ class ServingPlacement:
             one, params, is_leaf=lambda x: isinstance(x, SparseWeight))
 
     def step_fn_shardings(self, param_shardings,
-                          kv_layout: str = "slot") -> dict:
+                          kv_layout: str = "slot",
+                          kv_dtype: str = "bf16") -> dict:
         """Explicit in/out shardings for the TWO jitted step functions of
         the unified attend-over-pool engine, keyed by role:
 
@@ -213,18 +226,30 @@ class ServingPlacement:
                     -> (logits, (k, v)) — donated arenas stay in place
                     shard-for-shard.
 
+        With ``kv_dtype="int8"`` both functions take the two scale arenas
+        right after k/v — (params, k, v, k_scale, v_scale, ...) ->
+        (logits, (k, v, k_scale, v_scale)) — co-sharded on the KV-head
+        dim via ``kv_scale``.
+
         With no mesh every entry is empty: the engine then builds plain
         single-device jits.
         """
         if not self.active:
             return {k: {} for k in ("step", "decode")}
         psh, rep, kv = param_shardings, self.replicated, self.kv
-        out = (rep, (kv, kv))
-        decode_in = (psh, kv, kv, rep, rep, rep) if kv_layout == "paged" \
-            else (psh, kv, kv, rep, rep)
+        if kv_dtype == "int8":
+            ksc = self.kv_scale
+            out = (rep, (kv, kv, ksc, ksc))
+            decode_in = (psh, kv, kv, ksc, ksc, rep, rep, rep) \
+                if kv_layout == "paged" else (psh, kv, kv, ksc, ksc, rep, rep)
+            step_in = (psh, kv, kv, ksc, ksc, rep, rep, rep, rep)
+        else:
+            out = (rep, (kv, kv))
+            decode_in = (psh, kv, kv, rep, rep, rep) if kv_layout == "paged" \
+                else (psh, kv, kv, rep, rep)
+            step_in = (psh, kv, kv, rep, rep, rep, rep)
         return {
-            "step": dict(in_shardings=(psh, kv, kv, rep, rep, rep, rep),
-                         out_shardings=out),
+            "step": dict(in_shardings=step_in, out_shardings=out),
             "decode": dict(in_shardings=decode_in, out_shardings=out),
         }
 
@@ -240,6 +265,12 @@ class ServingPlacement:
         if not self.active:
             return arr
         return jax.device_put(arr, self.kv)
+
+    def place_kv_scale(self, arr):
+        """Commit an int8 arena's scale tensor next to its arena shards."""
+        if not self.active:
+            return arr
+        return jax.device_put(arr, self.kv_scale)
 
     def place_replicated(self, arr):
         if not self.active:

@@ -150,14 +150,15 @@ class ModelDrafter:
     """
 
     def __init__(self, cfg, params, placement, *, n_slots: int,
-                 max_len: int):
+                 max_len: int, kv_dtype: str = "bf16"):
         psh = placement.param_shardings(params)
         params = params if psh is None else jax.device_put(params, psh)
         self.cfg = cfg
         self.adapter = families.TransformerAdapter(
             cfg, params, placement, psh, kv_layout="slot", n_slots=n_slots,
             max_len=max_len, block_size=16, n_blocks=None,
-            prefix_caching=False, paged_attn_backend=None)
+            prefix_caching=False, paged_attn_backend=None,
+            kv_dtype=kv_dtype)
         self.adapter.trace_kind_prefix = "draft_"
         self.max_len = max_len
         # dpos[slot]: draft-arena positions holding the slot's TRUE
@@ -242,7 +243,7 @@ class Speculator:
     """The engine's handle on speculation: one proposer + the config."""
 
     def __init__(self, spec: SpeculativeConfig, target_cfg, placement, *,
-                 n_slots: int, max_len: int):
+                 n_slots: int, max_len: int, kv_dtype: str = "bf16"):
         self.cfg = spec
         self.drafter = None
         self.ngram = None
@@ -254,7 +255,8 @@ class Speculator:
                     f"{target_cfg.vocab}: draft tokens must be target "
                     f"tokens")
             self.drafter = ModelDrafter(dcfg, spec.params, placement,
-                                        n_slots=n_slots, max_len=max_len)
+                                        n_slots=n_slots, max_len=max_len,
+                                        kv_dtype=kv_dtype)
         else:
             self.ngram = NGramProposer(spec.ngram)
 

@@ -65,12 +65,10 @@ def _check_invariants(pool: PagedKVPool) -> None:
         assert cache.n_evictable == rescan, "stale O(1) evictability counter"
 
 
-@settings(max_examples=12, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_pool_lifecycle_invariants_hold(seed):
+def _lifecycle_walk(seed, kv_dtype="bf16"):
     rng = random.Random(seed)
     pool = PagedKVPool(CFG, n_rows=4, max_len=6 * BS, block_size=BS,
-                       n_blocks=8)
+                       n_blocks=8, kv_dtype=kv_dtype)
     active: dict[int, list[int]] = {}             # row -> full token seq
 
     for _ in range(40):
@@ -141,6 +139,21 @@ def test_pool_lifecycle_invariants_hold(seed):
         _check_invariants(pool)
     if cache is not None:
         assert pool.blocks.n_free == pool.n_blocks   # all but trash free
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pool_lifecycle_invariants_hold(seed):
+    _lifecycle_walk(seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pool_lifecycle_invariants_hold_int8(seed):
+    """The same walk over a quantized pool: scale arenas change no
+    refcount/free-list/prefix-cache bookkeeping (scales are addressed
+    through the block tables, never tracked separately)."""
+    _lifecycle_walk(seed, kv_dtype="int8")
 
 
 @settings(max_examples=10, deadline=None)
@@ -214,5 +227,78 @@ def test_fork_diverges_copy_on_write(seed):
 
     pool.release(child)
     _check_invariants(pool)
+    pool.release(parent)
+    _check_invariants(pool)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_copy_on_write_carries_scales(seed):
+    """int8 pools: copy-on-write must copy the per-position scale block
+    alongside the value block — a CoW'd block with stale scales would
+    dequantize the right int8 bytes with the wrong multipliers."""
+    rng = random.Random(seed)
+    pool = BlockPool(CFG, n_blocks=4, block_size=BS, kv_dtype="int8")
+    assert pool.k.dtype == jnp.int8 and pool.k_scale is not None
+    src = pool.alloc()
+    kq, vq = rng.randint(-127, 127), rng.randint(-127, 127)
+    ks, vs = rng.uniform(0.01, 2.0), rng.uniform(0.01, 2.0)
+    pool.k = pool.k.at[:, src].set(kq)
+    pool.v = pool.v.at[:, src].set(vq)
+    pool.k_scale = pool.k_scale.at[:, src].set(ks)
+    pool.v_scale = pool.v_scale.at[:, src].set(vs)
+    pool.incref(src)                              # shared: CoW must copy
+    dst = pool.copy_on_write(src)
+    assert dst != src
+    np.testing.assert_array_equal(np.asarray(pool.k[:, dst]),
+                                  np.asarray(pool.k[:, src]))
+    np.testing.assert_array_equal(np.asarray(pool.v[:, dst]),
+                                  np.asarray(pool.v[:, src]))
+    np.testing.assert_allclose(np.asarray(pool.k_scale[:, dst]),
+                               np.full_like(
+                                   np.asarray(pool.k_scale[:, dst]), ks))
+    np.testing.assert_allclose(np.asarray(pool.v_scale[:, dst]),
+                               np.asarray(pool.v_scale[:, src]))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fork_scale_bookkeeping(seed):
+    """Fork + first decode write on an int8 pool: the CoW triggered by
+    prepare_decode carries the shared block's scales to the private copy
+    and leaves the parent's block (values AND scales) untouched."""
+    rng = random.Random(seed)
+    pool = PagedKVPool(CFG, n_rows=4, max_len=6 * BS, block_size=BS,
+                       n_blocks=12, kv_dtype="int8")
+    n_tok = rng.randint(2 * BS + 1, 3 * BS - 1)   # 3 blocks, last partial
+    toks = [rng.randint(0, 63) for _ in range(n_tok)]
+    parent, _ = pool.admit(toks)
+    pool._pos_np[parent] = n_tok
+    shared = pool.tables[parent].blocks[-1]       # the partial tail block
+    kq, ksc = rng.randint(-127, 127), rng.uniform(0.01, 2.0)
+    pool.blocks.k = pool.blocks.k.at[:, shared].set(kq)
+    pool.blocks.k_scale = pool.blocks.k_scale.at[:, shared].set(ksc)
+
+    child = pool.fork(parent)
+    _check_invariants(pool)
+    pool.prepare_decode([child], [1])             # child writes -> CoW
+    pool._pos_np[child] += 1
+    _check_invariants(pool)
+    priv = pool.tables[child].blocks[-1]
+    assert priv != shared
+    np.testing.assert_array_equal(
+        np.asarray(pool.blocks.k[:, priv]),
+        np.asarray(pool.blocks.k[:, shared]))
+    np.testing.assert_allclose(
+        np.asarray(pool.blocks.k_scale[:, priv]),
+        np.asarray(pool.blocks.k_scale[:, shared]))
+    # parent view untouched: still the original quantized bytes + scales
+    np.testing.assert_array_equal(
+        np.asarray(pool.blocks.k[:, shared]),
+        np.full_like(np.asarray(pool.blocks.k[:, shared]), kq))
+    np.testing.assert_allclose(
+        np.asarray(pool.blocks.k_scale[:, shared]),
+        np.full_like(np.asarray(pool.blocks.k_scale[:, shared]), ksc))
+    pool.release(child)
     pool.release(parent)
     _check_invariants(pool)
