@@ -62,6 +62,35 @@ def make_serving_mesh(spec: str | None):
     return jax.make_mesh((d, m), ("data", "model"))
 
 
+def make_replica_meshes(spec: str | None, n_replicas: int) -> list:
+    """Per-replica serving meshes over DISJOINT device slices — fleet
+    scale-out: replica i's ``spec``-shaped mesh uses devices
+    [i*d*m, (i+1)*d*m), so N engine replicas run side by side with no
+    device shared (each replica's jitted steps dispatch to its own
+    devices).  ``spec`` is the PER-REPLICA mesh; None -> [None]*N (every
+    replica on the default single-device path, the CPU smoke case)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    dm = parse_mesh_spec(spec)
+    if dm is None:
+        return [None] * n_replicas
+    d, m = dm
+    per = d * m
+    devices = jax.devices()
+    if per * n_replicas > len(devices):
+        raise ValueError(
+            f"{n_replicas} replicas of a {d}x{m} mesh need "
+            f"{per * n_replicas} devices but only {len(devices)} are "
+            f"visible (CPU: set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={per * n_replicas} before the first jax import)")
+    return [Mesh(np.asarray(devices[i * per:(i + 1) * per]).reshape(d, m),
+                 ("data", "model"))
+            for i in range(n_replicas)]
+
+
 # TPU v5e hardware constants (roofline):
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip

@@ -44,6 +44,16 @@ model-free prompt-lookup proposer; ``self`` drafts with the target's own
 params (an upper bound on acceptance, used by the parity tests).  Greedy
 speculative streams are token-identical to non-speculative ones.
 
+``--replicas N`` serves through N in-process engine replicas behind the
+fleet router (serving/fleet/): every request is scored per replica on
+prefix-cache hit potential, load, and session affinity
+(``--routing prefix``; ``round_robin``/``least_loaded`` are the
+baselines), with work-stealing rebalance between steps.  Each replica
+gets its own ``--slots``/``--n-blocks`` pool; with ``--mesh`` the spec
+is PER REPLICA and replicas take disjoint device slices
+(``make_replica_meshes``).  Token streams are identical to a single
+engine serving the same requests.
+
 ``--trace-out trace.json`` turns on the observability substrate
 (serving/observe.py): a Chrome/Perfetto ``trace_event`` JSON of every
 request lifecycle, engine step, jitted call and preemption (load the file
@@ -122,18 +132,13 @@ def run_oneshot(cfg, zoo, params, key, args):
 
 
 def _engine_kwargs(args) -> dict:
-    from .mesh import make_serving_mesh
-    mesh = make_serving_mesh(args.mesh)
-    if mesh is not None:
-        print(f"serving mesh: {dict(mesh.shape)} "
-              f"({mesh.devices.size} devices, {jax.default_backend()})")
     return dict(n_slots=args.slots, max_queue=args.max_queue,
                 token_budget=args.token_budget,
                 max_prefill_per_step=args.max_prefill_per_step,
                 kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
                 block_size=args.block_size,
                 n_blocks=args.n_blocks,
-                prefix_caching=not args.no_prefix_cache, mesh=mesh)
+                prefix_caching=not args.no_prefix_cache)
 
 
 def _make_draft(cfg, params, args):
@@ -182,6 +187,65 @@ def _make_tracer(args):
     return ServingTracer()
 
 
+def _make_fleet_tracers(args, n: int):
+    """Per-replica ServingTracers sharing ONE buffer + registry (each
+    replica gets its own pid track in the merged Perfetto file) plus the
+    RouterTracer for routing-decision instants, when --trace-out was
+    given; (None, None) otherwise."""
+    if not getattr(args, "trace_out", None):
+        return None, None
+    from ..serving import RouterTracer, ServingTracer
+    first = ServingTracer(name="r0")
+    tracers = [first] + [
+        ServingTracer(buffer=first.buffer, registry=first.registry,
+                      name=f"r{i}") for i in range(1, n)]
+    router = RouterTracer(buffer=first.buffer, registry=first.registry,
+                          name="router")
+    return tracers, router
+
+
+def _build_target(cfg, params, args, *, max_len):
+    """The serving target: one engine, or ``--replicas N`` of them behind
+    the prefix-aware router.  ReplicaSet duck-types the engine surface
+    (submit/step/run/has_work/finished/stats), so run/replay drive either.
+    Returns (target, tracer-to-write)."""
+    from .mesh import make_replica_meshes, make_serving_mesh
+    draft = _make_draft(cfg, params, args)
+    kw = _engine_kwargs(args)
+    if args.replicas == 1:
+        mesh = make_serving_mesh(args.mesh)
+        if mesh is not None:
+            print(f"serving mesh: {dict(mesh.shape)} "
+                  f"({mesh.devices.size} devices, {jax.default_backend()})")
+        from ..serving import ServingEngine
+        tracer = _make_tracer(args)
+        return ServingEngine(cfg, params, max_len=max_len, tracer=tracer,
+                             draft=draft, mesh=mesh, **kw), tracer
+    from ..serving import ReplicaSet
+    meshes = make_replica_meshes(args.mesh, args.replicas)
+    if meshes[0] is not None:
+        print(f"fleet meshes: {args.replicas} x {dict(meshes[0].shape)} "
+              f"(disjoint slices, {jax.default_backend()})")
+    tracers, router_tracer = _make_fleet_tracers(args, args.replicas)
+    fleet = ReplicaSet(cfg, params, n_replicas=args.replicas,
+                       routing=args.routing, meshes=meshes, tracers=tracers,
+                       router_tracer=router_tracer, max_len=max_len,
+                       draft=draft, **kw)
+    return fleet, (tracers[0] if tracers else None)
+
+
+def _print_fleet_stats(target) -> None:
+    st = target.stats()
+    if "n_replicas" not in st:
+        return
+    pc = st["prefix_cache"]
+    per = [f"r{i}: {p['n_finished']} done, {p['n_steps']} steps"
+           for i, p in enumerate(st["replicas"])]
+    print(f"  fleet[{st['routing']}]: {st['n_replicas']} replicas, "
+          f"{st['n_steals']} steals, {st['n_drains']} drains, "
+          f"prefix-hit {pc['hit_rate']:.2f} | " + "; ".join(per))
+
+
 def _write_observability(tracer, args) -> None:
     """Write the Perfetto trace and the Prometheus counter snapshot next
     to it (<trace-out> and <trace-out>.counters.txt)."""
@@ -196,13 +260,11 @@ def _write_observability(tracer, args) -> None:
 
 
 def run_engine(cfg, params, key, args, quiet: bool = False):
-    """Continuous-batching engine on a batch of random prompts."""
-    from ..serving import SamplingParams, ServingEngine
-    tracer = _make_tracer(args)
-    engine = ServingEngine(cfg, params,
-                           max_len=args.prompt_len + args.gen,
-                           tracer=tracer, draft=_make_draft(cfg, params, args),
-                           **_engine_kwargs(args))
+    """Continuous-batching engine (or --replicas N fleet) on a batch of
+    random prompts."""
+    from ..serving import SamplingParams
+    engine, tracer = _build_target(cfg, params, args,
+                                   max_len=args.prompt_len + args.gen)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
     # enc-dec requests carry their encoder features (same draw as the
     # one-shot loop, so --legacy parity compares like against like)
@@ -221,26 +283,25 @@ def run_engine(cfg, params, key, args, quiet: bool = False):
     if not quiet:
         print(f"engine[{args.kv_layout}]: {args.batch} requests, {n_tok} "
               f"tokens in {wall:.2f}s ({n_tok/max(wall,1e-9):.1f} tok/s, "
-              f"{engine.n_steps} steps, {args.slots} slots)")
-        if args.kv_layout == "paged":
+              f"{engine.stats()['n_steps']} steps, {args.slots} slots)")
+        if args.kv_layout == "paged" and args.replicas == 1:
             print(f"  paged: {engine.stats()['pool']}")
+        _print_fleet_stats(engine)
         _print_spec_stats(engine)
     _write_observability(tracer, args)
     return jnp.asarray([r.tokens for r in reqs], jnp.int32)
 
 
 def run_trace(cfg, params, args):
-    """Replay a recorded request trace through the engine."""
+    """Replay a recorded request trace through the engine (or fleet)."""
     from ..runtime.metrics import format_summary, summarize
-    from ..serving import ServingEngine, load_trace, replay
-    tracer = _make_tracer(args)
-    engine = ServingEngine(cfg, params, max_len=args.max_len,
-                           tracer=tracer, draft=_make_draft(cfg, params, args),
-                           **_engine_kwargs(args))
+    from ..serving import load_trace, replay
+    engine, tracer = _build_target(cfg, params, args, max_len=args.max_len)
     trace = load_trace(args.trace)
     res = replay(engine, trace, time_scale=args.time_scale)
     summary = summarize([r.metrics for r in res["finished"]], res["wall_s"])
     print(format_summary("trace", summary))
+    _print_fleet_stats(engine)
     _print_spec_stats(engine)
     if res["rejected"]:
         print(f"rejected by admission control: {res['rejected']}")
@@ -263,7 +324,18 @@ def main(argv=None):
     ap.add_argument("--legacy", action="store_true",
                     help="one-shot lock-step loop instead of the engine")
     ap.add_argument("--slots", type=int, default=8,
-                    help="engine KV-pool slots (concurrent requests)")
+                    help="engine KV-pool slots (concurrent requests); "
+                         "per replica with --replicas")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve with N in-process engine replicas behind "
+                         "the fleet router (serving/fleet/); each replica "
+                         "gets its own --slots/--n-blocks pool and, with "
+                         "--mesh, its own disjoint device slice")
+    ap.add_argument("--routing", default="prefix",
+                    choices=("prefix", "round_robin", "least_loaded"),
+                    help="fleet routing policy: 'prefix' scores cached-"
+                         "prompt fraction minus load plus session "
+                         "affinity; baselines cycle or pick the emptiest")
     ap.add_argument("--kv-layout", default="slot", choices=("slot", "paged"),
                     help="contiguous per-slot KV vs paged block pool")
     ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"),
@@ -319,6 +391,10 @@ def main(argv=None):
     cfg = get_smoke(args.arch) if args.smoke_arch else get(args.arch)
     if args.trace is not None and args.legacy:
         ap.error("--trace replays through the engine; drop --legacy")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.legacy:
+        ap.error("--replicas needs the engine path; drop --legacy")
     if args.trace is not None and cfg.family not in SUPPORTED_FAMILIES:
         ap.error(f"--trace replays through the engine, which serves "
                  f"{SUPPORTED_FAMILIES} families; {args.arch!r} is "

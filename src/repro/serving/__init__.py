@@ -38,7 +38,9 @@ from .cache_pool import (CachePoolError, CapacityError, DoubleFree,
 from .engine import KV_LAYOUTS, ServingEngine, SUPPORTED_FAMILIES
 from .families import (EncDecAdapter, FamilyAdapter, HybridAdapter,
                        RecurrentAdapter, TransformerAdapter, build_adapter)
-from .observe import NULL_TRACER, NullTracer, ServingTracer
+from .fleet import ROUTING_POLICIES, ReplicaSet, RouteDecision, Router
+from .observe import (NULL_ROUTER_TRACER, NULL_TRACER, NullRouterTracer,
+                      NullTracer, RouterTracer, ServingTracer)
 from .paged import OutOfBlocks, PagedKVPool, PagedPoolView
 from .placement import ServingPlacement
 from .request import Request, SamplingParams, Status
@@ -48,6 +50,7 @@ from .scheduler import (CHUNK_QUANTUM, PREEMPT_DECODE_PRESSURE,
                         PREEMPT_PREFILL_PRESSURE, QueueFull, RequestQueue,
                         plan_chunks, resolve_token_budget,
                         spec_verify_reserve, validate_token_budget)
-from .speculative import NGramProposer, SpeculativeConfig, Speculator
-from .trace import (TraceRequest, load_trace, long_prompt_trace,
+from .speculative import (NGramProposer, SpeculativeConfig, Speculator,
+                          verify_bucket)
+from .trace import (TraceRequest, fleet_trace, load_trace, long_prompt_trace,
                     poisson_trace, replay, save_trace)

@@ -122,7 +122,7 @@ from .scheduler import (CHUNK_QUANTUM, PREEMPT_DECODE_PRESSURE,
                         PREEMPT_PREFILL_PRESSURE, QueueFull, RequestQueue,
                         pick_preemption_victim, plan_chunks,
                         resolve_token_budget, spec_verify_reserve)
-from .speculative import SpeculativeConfig, Speculator
+from .speculative import SpeculativeConfig, Speculator, verify_bucket
 
 SUPPORTED_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec")
 KV_LAYOUTS = ("slot", "paged")
@@ -244,12 +244,15 @@ class ServingEngine:
 
     # ------------------------------------------------------------ admission
     def submit(self, prompt, sampling: SamplingParams | None = None,
-               on_token=None, on_finish=None, embeds=None) -> Request:
+               on_token=None, on_finish=None, embeds=None,
+               request_id: int | None = None) -> Request:
         """Enqueue a request; raises QueueFull when admission control
         rejects (queue at capacity) and ValueError when the request can
         never fit the pool.  ``embeds`` is the enc-dec family's encoder
         input ([S_enc, d] frontend features, run once at admission); other
-        families reject it."""
+        families reject it.  ``request_id`` lets a fleet router issue
+        globally-unique ids across replicas; omitted, the engine numbers
+        requests itself."""
         sampling = sampling or SamplingParams()
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
         if not prompt:
@@ -263,16 +266,74 @@ class ServingEngine:
                 f"({sampling.max_new_tokens}) exceeds KV capacity "
                 f"{capacity}")
         self.adapter.validate_submit(prompt, sampling, embeds)
-        req = Request(self._next_id, prompt, sampling,
+        rid = self._next_id if request_id is None else int(request_id)
+        req = Request(rid, prompt, sampling,
                       on_token=on_token, on_finish=on_finish, embeds=embeds)
         req.metrics.family = self.cfg.family
-        self._next_id += 1
+        self._next_id = max(self._next_id + 1, rid + 1)
         req.metrics.arrival = self._clock()
         if not self.queue.try_push(req):
             raise QueueFull(f"queue at capacity ({self.queue.max_size})")
         if self.tracer.enabled:
             self.tracer.on_submit(req)
         return req
+
+    def ingest(self, req: Request) -> None:
+        """Adopt an already-constructed request from another engine (fleet
+        work-stealing / preemption drain).  The request must be queued and
+        unscheduled — it holds no slot, no KV, no per-engine state — so
+        migrating it is just re-enqueueing: its sampling stream is keyed
+        by (seed, tokens generated), which makes the token stream
+        engine-agnostic.  Metrics (arrival time, preemption count) ride
+        along untouched."""
+        if req.status is not Status.QUEUED or req.slot is not None:
+            raise ValueError(
+                f"ingest needs a queued, unscheduled request, got "
+                f"{req.status} (slot={req.slot})")
+        capacity = self.pool.max_request_tokens
+        need = len(self._seq(req)) + req.sampling.max_new_tokens \
+            - len(req.tokens)
+        if need > capacity:
+            raise ValueError(
+                f"request {req.request_id} needs {need} tokens, over this "
+                f"engine's KV capacity {capacity}")
+        if not self.queue.try_push(req):
+            raise QueueFull(f"queue at capacity ({self.queue.max_size})")
+        self._next_id = max(self._next_id, req.request_id + 1)
+        if self.tracer.enabled:
+            self.tracer.on_submit(req)
+
+    def withdraw(self, req: Request) -> bool:
+        """Remove a queued request from this engine so a fleet router can
+        ``ingest`` it elsewhere.  Returns False when the request is no
+        longer in this engine's queue (admitted or evicted since the
+        router looked)."""
+        if not self.queue.remove(req):
+            return False
+        if self.tracer.enabled:
+            self.tracer.on_withdraw(req)
+        return True
+
+    def steal_youngest(self) -> Request | None:
+        """Withdraw the YOUNGEST queued request (fleet work-stealing) —
+        the tail of the FIFO queue, so the head-of-line request and
+        everything the scheduler has promised service order to stays
+        put.  None when the queue is empty."""
+        req = self.queue.pop_back()
+        if req is not None and self.tracer.enabled:
+            self.tracer.on_withdraw(req)
+        return req
+
+    def prefix_match_length(self, prompt) -> int:
+        """How many leading tokens of ``prompt`` this engine's prefix
+        cache already holds — a side-effect-free host-side probe (no
+        refcounts, no LRU touch; see ``PrefixCache.match_length``).
+        Returns 0 for layouts/configs without a prefix cache, so routers
+        can score any engine uniformly."""
+        fn = getattr(self.pool, "prefix_match_length", None)
+        if fn is None:
+            return 0
+        return fn([int(t) for t in np.asarray(prompt).reshape(-1)])
 
     # ------------------------------------------------------------ stepping
     @property
@@ -331,6 +392,9 @@ class ServingEngine:
         """Engine-level counters plus the pool's memory/prefix accounting."""
         out = {"n_steps": self.n_steps, "max_running": self.max_running,
                "n_preemptions": self.n_preemptions,
+               "n_running": len(self.running),
+               "queue_depth": len(self.queue),
+               "n_finished": len(self.finished),
                "family": self.cfg.family,
                "kv_layout": self.kv_layout,
                "kv_dtype": self.kv_dtype,
@@ -717,7 +781,7 @@ class ServingEngine:
         # ladder instead of B x S, so a trickle of arrivals can't hit
         # batch shapes the warmup never saw.
         B = _bucket(self.pool.n_slots, 1)
-        S = _bucket(max(nds) + 1, 1)
+        S = verify_bucket(max(nds) + 1, self.spec.cfg.k)
         tokens = np.zeros((B, S), np.int32)
         cur = np.zeros((B,), np.int32)
         n_new = np.zeros((B,), np.int32)

@@ -330,6 +330,15 @@ class PagedKVPool:
             self._bt_np[row, t.n_blocks - 1] = t.blocks[-1]
             self._bt_dirty = True
 
+    def prefix_match_length(self, tokens) -> int:
+        """Side-effect-free probe: how many leading tokens of ``tokens``
+        the prefix cache already covers (0 when caching is off).  See
+        ``PrefixCache.match_length`` — no refcounts, no LRU touch, so
+        fleet routers can probe every replica per request for free."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.match_length(tokens)
+
     # -------------------------------------------------------------- data
     def register_prefix(self, row: int, tokens) -> None:
         """Publish the row's full blocks covering ``tokens`` into the

@@ -40,6 +40,7 @@ class PrefixCache:
         self.hit_tokens = 0
         self.inserted_blocks = 0
         self.evicted_blocks = 0
+        self.probes = 0                 # side-effect-free match_length calls
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -79,6 +80,31 @@ class PrefixCache:
             self.hits += 1
         self.hit_tokens += len(matched) * self._pool.block_size
         return matched
+
+    def match_length(self, tokens) -> int:
+        """Longest cached-prefix length of ``tokens``, in TOKENS, with NO
+        side effects: no refcounts taken, no LRU touch, no hit/lookup
+        accounting.
+
+        This is the router-facing probe behind prefix-aware replica
+        routing: a router probes EVERY replica's cache per incoming
+        request, and a probe must neither pin blocks (the request may be
+        routed elsewhere) nor disturb eviction order (N-1 losing probes
+        per request would otherwise refresh entries the winner never
+        uses).  ``match`` remains the admission-time lookup that actually
+        claims the blocks.  Probes are counted separately (``probes`` in
+        ``stats()``) so hit-rate accounting stays admission-only.
+        """
+        self.probes += 1
+        bs = self._pool.block_size
+        matched = 0
+        parent = None
+        for start in range(0, len(tokens) - len(tokens) % bs, bs):
+            parent = (parent, tuple(tokens[start:start + bs]))
+            if parent not in self._entries:
+                break
+            matched += 1
+        return matched * bs
 
     # ----------------------------------------------------------- insert
     def insert(self, tokens, blocks: list[int]) -> None:
@@ -129,10 +155,11 @@ class PrefixCache:
                 "hit_tokens": self.hit_tokens,
                 "entries": len(self._entries),
                 "inserted_blocks": self.inserted_blocks,
-                "evicted_blocks": self.evicted_blocks}
+                "evicted_blocks": self.evicted_blocks,
+                "probes": self.probes}
 
     def reset_stats(self) -> None:
         """Zero the counters without touching cached content (so a warmed
         cache can be measured over exactly one benchmark window)."""
         self.lookups = self.hits = self.hit_tokens = 0
-        self.inserted_blocks = self.evicted_blocks = 0
+        self.inserted_blocks = self.evicted_blocks = self.probes = 0

@@ -80,6 +80,31 @@ def _bucket(n: int, lo: int = 1) -> int:
     return b
 
 
+def verify_bucket(n_new_max: int, k0: int) -> int:
+    """S bucket for the fused verify step's q_len axis.
+
+    Rung 1 covers draft-free steps (every proposer came back empty, so
+    the verify degenerates to a decode-shaped step); any drafted step
+    lands on a power-of-two ladder anchored at the CONFIGURED operating
+    point ``_bucket(k0 + 1)`` rather than densely at every power of two
+    below it.  Proposers with variable draft length (n-gram matches run
+    0..k tokens; adaptive per-request k walks [min_k, max_k]) therefore
+    reuse ONE compiled verify shape across the whole [1, k0] range — pad
+    positions are masked by per-lane ``n_new`` — and only excursions
+    above k0 add rungs, at most log2(max_k/k0) of them.  The old
+    ``_bucket(max_nd + 1)`` ladder retraced once per draft-length bucket
+    the workload happened to hit (9 ``step`` retraces for adaptive n-gram
+    drafting in the serving bench); this trades a few masked pad columns
+    on short-draft steps for a variant count that is workload-independent.
+    """
+    if n_new_max <= 1:
+        return 1
+    b = _bucket(k0 + 1)
+    while b < n_new_max:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass(frozen=True)
 class SpeculativeConfig:
     """Engine-level speculative decoding configuration (``draft=``).

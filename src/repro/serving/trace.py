@@ -28,6 +28,9 @@ class TraceRequest:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    # session/tenant id for fleet routing affinity; -1 = no session.
+    # Defaulted so pre-fleet trace JSON still loads.
+    session: int = -1
 
     def sampling(self) -> SamplingParams:
         return SamplingParams(max_new_tokens=self.max_new_tokens,
@@ -81,6 +84,65 @@ def long_prompt_trace(*, n_short: int, short_len: int, gen_short: int,
     return out
 
 
+def fleet_trace(*, n_requests: int, n_tenants: int, vocab: int,
+                sys_len: int = 32, rate_per_s: float = 20.0,
+                burst_mean: float = 4.0,
+                prompt_median: int = 16, prompt_sigma: float = 0.8,
+                prompt_max: int = 64,
+                gen_median: int = 6, gen_sigma: float = 1.0,
+                gen_max: int = 48, temperature: float = 0.0,
+                seed: int = 0) -> list[TraceRequest]:
+    """The fleet-scale workload: shared-system-prompt tenants, heavy
+    tails, bursts — the "millions of users" shape, shrunk to a trace.
+
+    * **tenant mix**: each request belongs to one of ``n_tenants``
+      sessions and opens with that tenant's fixed ``sys_len``-token
+      system prompt followed by a per-request tail — the prefix-cache
+      sharing opportunity routing is meant to exploit (and round-robin
+      is meant to squander, by spreading every tenant over every
+      replica's cache);
+    * **heavy-tailed lengths**: prompt-tail and output lengths are
+      lognormal (median/sigma, clipped to [1, max]) — a few stragglers
+      decode long after the cohort retires, which is exactly where one
+      wide engine burns its full fused-decode lane complement on
+      near-empty batches;
+    * **bursty arrivals**: arrival epochs are Poisson at ``rate_per_s``
+      and each epoch lands a geometric burst (mean ``burst_mean``) of
+      back-to-back requests — queues actually form, giving
+      work-stealing something to level.
+
+    Deterministic in ``seed`` and — by construction — independent of
+    who consumes it: every sample is drawn from one generator in one
+    fixed order, so 1-replica and N-replica runs (any routing policy)
+    replay the identical request stream (pinned by tests/test_fleet.py).
+    """
+    rng = np.random.default_rng(seed)
+    sys_prompts = [rng.integers(0, vocab, size=sys_len).tolist()
+                   for _ in range(n_tenants)]
+
+    def _lognormal(median: int, sigma: float, hi: int) -> int:
+        x = rng.lognormal(mean=float(np.log(max(median, 1))), sigma=sigma)
+        return int(np.clip(round(x), 1, hi))
+
+    out: list[TraceRequest] = []
+    t = 0.0
+    while len(out) < n_requests:
+        t += float(rng.exponential(1.0 / rate_per_s))
+        burst = min(1 + int(rng.geometric(1.0 / burst_mean)),
+                    n_requests - len(out))
+        for j in range(burst):
+            i = len(out)
+            tenant = int(rng.integers(n_tenants))
+            tail = _lognormal(prompt_median, prompt_sigma, prompt_max)
+            prompt = sys_prompts[tenant] \
+                + rng.integers(0, vocab, size=tail).tolist()
+            out.append(TraceRequest(
+                arrival_s=t + 1e-4 * j, prompt=prompt,
+                max_new_tokens=_lognormal(gen_median, gen_sigma, gen_max),
+                temperature=temperature, seed=i, session=tenant))
+    return out
+
+
 def save_trace(path: str, trace: list[TraceRequest]) -> None:
     with open(path, "w") as f:
         json.dump([dataclasses.asdict(t) for t in trace], f)
@@ -109,7 +171,14 @@ def replay(engine, trace: list[TraceRequest], *, time_scale: float = 1.0,
             tr = pending[i]
             i += 1
             try:
-                engine.submit(tr.prompt, tr.sampling())
+                # fleets take a session id for routing affinity; plain
+                # engines don't — feature-detect so one replay drives both
+                if tr.session >= 0 and getattr(engine, "accepts_session",
+                                               False):
+                    engine.submit(tr.prompt, tr.sampling(),
+                                  session=tr.session)
+                else:
+                    engine.submit(tr.prompt, tr.sampling())
             except (QueueFull, ValueError) as e:
                 # queue at capacity, or the request can never fit a slot —
                 # open-loop workload: count it rejected, keep replaying

@@ -138,6 +138,48 @@ def test_prefix_cache_match_insert_evict():
     assert len(cache) == 0
 
 
+def test_prefix_cache_match_length_probe_is_side_effect_free():
+    pool = BlockPool(CFG, n_blocks=4, block_size=4)
+    cache = PrefixCache(pool)
+    toks = list(range(11))                       # 2 full blocks + tail of 3
+    blocks = [pool.alloc() for _ in range(3)]
+    cache.insert(toks, blocks)
+    order_after_insert = list(cache._entries)
+
+    # exact multiples, partial tails, and the chain property
+    assert cache.match_length(toks) == 8         # tail never matches
+    assert cache.match_length(toks[:8]) == 8
+    assert cache.match_length(toks[:7]) == 4     # partial second block
+    assert cache.match_length(toks[:4]) == 4
+    assert cache.match_length(toks[:3]) == 0
+    assert cache.match_length(toks + [99] * 8) == 8
+    assert cache.match_length([99] * 4 + toks[4:]) == 0
+    assert cache.match_length([]) == 0
+
+    # the router probes every replica per request: NO refcounts taken,
+    # NO LRU touch, NO hit/lookup accounting — probes counted apart
+    assert [int(pool.ref[b]) for b in blocks] == [2, 2, 1]
+    assert list(cache._entries) == order_after_insert
+    st = cache.stats()
+    assert st["probes"] == 8
+    assert st["lookups"] == 0 and st["hits"] == 0 and st["hit_tokens"] == 0
+    m = cache.match(toks)                        # admission lookup DOES count
+    assert cache.stats()["lookups"] == 1 and cache.stats()["hits"] == 1
+    for b in m:
+        pool.decref(b)
+
+
+def test_pool_prefix_match_length_passthrough():
+    pool = PagedKVPool(CFG, n_rows=4, max_len=32, block_size=4)
+    p = list(range(10))
+    assert pool.prefix_match_length(p) == 0      # cold cache
+    row, _ = pool.admit(p)
+    pool.register_prefix(row, p)
+    assert pool.prefix_match_length(p) == 8      # 2 full blocks cached
+    assert pool.prefix_match_length(p[:5]) == 4
+    assert pool.prefix_match_length([7] + p) == 0
+
+
 def test_pool_admit_shares_and_releases():
     pool = PagedKVPool(CFG, n_rows=4, max_len=32, block_size=4)
     p = list(range(10))                          # 3 blocks

@@ -302,3 +302,57 @@ def test_fork_scale_bookkeeping(seed):
     pool.release(child)
     pool.release(parent)
     _check_invariants(pool)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_match_length_probe_agrees_with_admission(seed):
+    """The fleet router's side-effect-free probe must predict admission
+    truth: for ANY prompt against ANY cache state, ``admit`` reuses
+    exactly ``min(match_length(p), (len(p)-1)//bs*bs)`` cached tokens
+    (the cap keeps the last prompt token recomputed for first-token
+    logits), and probing — once or many times — never changes what a
+    subsequent admission sees.  A disagreement would mean prefix-aware
+    routing sends requests to replicas that then can't deliver the
+    predicted reuse."""
+    rng = random.Random(seed)
+    pool = PagedKVPool(CFG, n_rows=4, max_len=6 * BS, block_size=BS,
+                       n_blocks=32)
+    seen: list[list[int]] = []
+    rows: list[int] = []
+    for _ in range(16):
+        if seen and rng.random() < 0.6:
+            # extend / truncate a previously admitted prompt: shared
+            # prefixes of every alignment, the case routing cares about
+            base = rng.choice(seen)
+            cut = rng.randint(0, len(base))
+            toks = base[:cut] + [rng.randint(0, 2)
+                                 for _ in range(rng.randint(1, 6))]
+        else:
+            toks = [rng.randint(0, 2)
+                    for _ in range(rng.randint(1, pool.max_request_tokens))]
+        toks = toks[:pool.max_request_tokens]
+
+        ml = pool.prefix_match_length(toks)
+        assert ml % BS == 0
+        assert 0 <= ml <= len(toks) - len(toks) % BS
+        assert pool.prefix_match_length(toks) == ml    # probe idempotent
+
+        if len(rows) == pool.n_rows:                   # make room
+            pool.release(rows.pop(0))
+        try:
+            row, n_cached = pool.admit(toks)
+        except OutOfBlocks:
+            _check_invariants(pool)
+            continue
+        expected = min(ml, (len(toks) - 1) // BS * BS) if ml else 0
+        assert n_cached == expected, \
+            f"probe said {ml}, admit reused {n_cached} of {len(toks)}"
+        pool._pos_np[row] = len(toks)
+        pool.register_prefix(row, toks)
+        rows.append(row)
+        seen.append(toks)
+        # the probe itself must appear in stats as a probe, not a lookup
+        _check_invariants(pool)
+    st_ = pool.prefix_cache.stats()
+    assert st_["probes"] >= 2 * len(seen)

@@ -370,3 +370,39 @@ def test_draft_validation_errors(dense_params):
                       draft=SpeculativeConfig(
                           method="model", params=dense_params,
                           cfg=bad_vocab))
+
+
+def test_verify_bucket_ladder_anchors_at_configured_k():
+    from repro.serving import verify_bucket
+    # draft-free steps (ngram found nothing) keep the decode shape
+    assert verify_bucket(1, 4) == 1
+    # any drafted step in [1, k0] shares ONE compiled shape...
+    assert [verify_bucket(q, 4) for q in (2, 3, 4, 5)] == [8, 8, 8, 8]
+    # ...and adaptive excursions above k0 add log2(max_k/k0) rungs
+    assert verify_bucket(9, 4) == 16
+    # k0=1 (the adaptive self-draft test's config) keeps the old ladder
+    assert [verify_bucket(q, 1) for q in (1, 2, 3, 5, 9)] == [1, 2, 4, 8, 16]
+
+
+def test_ngram_variable_draft_len_variants_bucketed(dense_params):
+    """N-gram proposals run 0..k tokens per lane per step — the exact
+    workload that retraced the verify step once per draft-length bucket
+    (9 ``step`` variants in the serving bench) before the ladder was
+    anchored at the configured k.  Periodic prompts make the proposer
+    actually fire at varying match lengths; the compiled step variants
+    must stay within the same bound as the adaptive-k model-draft test."""
+    tracer = ServingTracer()
+    draft = SpeculativeConfig(k=4, min_k=1, max_k=8, method="ngram")
+    # period-4 token loops with varying phase: suffix lookup hits with
+    # continuation lengths all over [0, k]
+    prompts = [([5, 6, 7, 8] * 6)[:16 + i] for i in range(3)]
+    engine, reqs = _run(dense_params, prompts, gen=24, max_len=64,
+                        draft=draft, tracer=tracer)
+    assert all(r.status is Status.FINISHED for r in reqs)
+    assert engine.n_drafted > 0, "ngram proposer never fired"
+    variants = {}
+    for ev in tracer.buffer.events:
+        if ev["name"] in ("compile", "retrace"):
+            fn = ev["args"]["fn"]
+            variants[fn] = variants.get(fn, 0) + 1
+    assert variants["step"] <= 6, variants
